@@ -1,0 +1,52 @@
+"""Paper App. I.2: BTARD overhead vs plain All-Reduce.
+
+Two views:
+  * measured step time of the butterfly robust aggregation vs a plain mean
+    over stacked peer gradients, as d grows (CPU timings — relative overhead
+    is the signal);
+  * the communication model: per-peer bytes for AR vs BTARD
+    (2d for ring/butterfly AR; BTARD adds O(n^2) scalars — independent of d,
+    exactly the paper's §3.1 cost accounting).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core.butterfly import butterfly_clip, get_random_directions, verification_tables
+
+
+def comm_model(n, d, bytes_per=4):
+    ar = 2 * d * bytes_per  # reduce-scatter + all-gather per peer
+    btard_extra = (2 * n * n + 3 * n) * bytes_per  # s-table, norms, hashes, mprng
+    return ar, btard_extra
+
+
+def main(fast=True):
+    n = 16
+    dims = [1 << 14, 1 << 17] if fast else [1 << 14, 1 << 17, 1 << 20, 1 << 23]
+    for d in dims:
+        g = jax.random.normal(jax.random.key(0), (n, d))
+
+        mean_fn = jax.jit(lambda x: x.mean(0))
+        us_mean = timer(mean_fn, g, reps=10)
+
+        def full_btard(x):
+            agg, parts = butterfly_clip(x, tau=1.0, n_iters=20)
+            z = get_random_directions(7, agg.shape[0], agg.shape[1])
+            s, norms = verification_tables(parts, agg, z, 1.0)
+            return agg, s, norms
+
+        us_btard = timer(jax.jit(full_btard), g, reps=5)
+        ar, extra = comm_model(n, d)
+        emit(
+            f"overhead/d={d}",
+            us_btard,
+            f"mean_us={us_mean:.1f};overhead_x={us_btard/max(us_mean,1e-9):.2f};"
+            f"comm_ar_bytes={ar};comm_btard_extra_bytes={extra};"
+            f"extra_frac={extra/ar:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,80 @@
+"""Roofline report from the dry-run artifacts (results/dryrun/*.json).
+
+Per (arch x shape x mesh x step):
+  compute term    = FLOPs / (chips * 197e12)
+  memory term     = bytes / (chips * 819e9)
+  collective term = collective_bytes / (chips * 50e9)   [per-device program:
+                    collective bytes already per device => / link_bw]
+plus MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+FLOPs/bytes use the scan-corrected values when the probe succeeded.
+"""
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+from benchmarks.common import emit
+
+
+def analyze_record(rec):
+    chips = rec["n_devices"]
+    flops = rec.get("flops_corrected", rec["flops"])
+    byts = rec.get("bytes_corrected", rec["bytes"])
+    coll = rec.get(
+        "collective_bytes_corrected", rec["collective_bytes"].get("total", 0)
+    )
+    # cost_analysis is for the per-device partitioned program
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    n_active = rec.get("active_param_count", rec.get("param_count", 0))
+    shape = rec["shape"]
+    tokens = {
+        "train_4k": 4096 * 256,
+        "prefill_32k": 32768 * 32,
+        "decode_32k": 128,
+        "long_500k": 1,
+    }.get(shape, 0)
+    if rec["step"] in ("baseline", "btard"):
+        model_flops = 6 * n_active * tokens
+    else:
+        model_flops = 2 * n_active * tokens
+    ratio = model_flops / max(flops * chips, 1e-9)
+    return terms, dominant, model_flops, ratio
+
+
+def main(fast=True, out_dir="results/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        emit("roofline/no_dryrun_artifacts", 0.0, "run launch.dryrun first")
+        return
+    print(
+        "# arch,shape,mesh,step,compute_s,memory_s,collective_s,dominant,"
+        "model_flops,useful_ratio,temp_GB"
+    )
+    for f in files:
+        rec = json.load(open(f))
+        if rec["mesh"] != "16x16":
+            continue  # roofline table is single-pod (multi-pod = dry-run proof only)
+        terms, dom, mf, ratio = analyze_record(rec)
+        print(
+            f"{rec['arch']},{rec['shape']},{rec['mesh']},{rec['step']},"
+            f"{terms['compute']:.4e},{terms['memory']:.4e},"
+            f"{terms['collective']:.4e},{dom},{mf:.3e},{ratio:.3f},"
+            f"{rec.get('temp_size_in_bytes', 0)/1e9:.1f}",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main(fast=False)

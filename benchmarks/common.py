@@ -1,0 +1,72 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
+from repro.data import classification_batch, peer_seed
+from repro.optim import sgd
+
+DIM, CLASSES = 16, 4
+
+
+def timer(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def classification_setup():
+    def batch_fn(peer, step, flipped):
+        return classification_batch(
+            peer_seed(0, step, peer), 16, DIM, CLASSES, flip_labels=flipped
+        )
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return -jnp.mean(
+            jnp.take_along_axis(
+                jax.nn.log_softmax(logits), batch["y"][:, None], axis=1
+            )
+        )
+
+    params0 = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
+    eval_batch = classification_batch(10**7, 1024, DIM, CLASSES)
+
+    def accuracy(params):
+        logits = eval_batch["x"] @ params["w"] + params["b"]
+        return float((jnp.argmax(logits, 1) == eval_batch["y"]).mean())
+
+    return loss_fn, params0, batch_fn, accuracy
+
+
+def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2, seed=0):
+    loss_fn, params0, batch_fn, accuracy = classification_setup()
+    byz = tuple(range(n_peers - n_byz, n_peers))
+    cfg = TrainerConfig(
+        n_peers=n_peers,
+        byzantine=byz,
+        attack=AttackConfig(kind=attack, start_step=5, delay=5),
+        defense=defense,
+        tau=tau,
+        m_validators=m,
+        seed=seed,
+    )
+    tr = BTARDTrainer(
+        loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9)
+    )
+    t0 = time.perf_counter()
+    tr.run(steps)
+    dt = time.perf_counter() - t0
+    return accuracy(tr.unraveled_params()), len(tr.banned), dt / steps * 1e6

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Each bench prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast mode (CI-sized)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-sized grids
+  PYTHONPATH=src python -m benchmarks.run --only fig3
+"""
+import argparse
+import time
+
+BENCHES = {
+    "fig3": ("benchmarks.bench_fig3_attacks", "Fig. 3 attack x defense grid"),
+    "table1": ("benchmarks.bench_table1_convergence", "Table 1 iterations-to-eps"),
+    "fig9": ("benchmarks.bench_fig9_clip_iters", "Fig. 9 CenteredClip budget"),
+    "overhead": ("benchmarks.bench_overhead", "App. I.2 BTARD overhead"),
+    "roofline": ("benchmarks.bench_roofline", "Dry-run roofline terms"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+
+    import importlib
+
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        mod_name, desc = BENCHES[name]
+        print(f"# === {name}: {desc} ===", flush=True)
+        t0 = time.time()
+        mod = importlib.import_module(mod_name)
+        mod.main(fast=not args.full)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

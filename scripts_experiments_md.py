@@ -1,0 +1,42 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from results/dryrun."""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.bench_roofline import analyze_record
+
+recs = [json.load(open(f)) for f in sorted(glob.glob("results/dryrun/*.json"))]
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"], r["step"]))
+
+# --- Dry-run table (both meshes, compile proof + memory) ---
+print("<!-- DRYRUN_TABLE -->")
+print("| arch | shape | mesh | step | compile | args/dev | temp/dev | HLO GFLOPs/dev | coll GB/dev |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in recs:
+    fl = r.get("flops_corrected", r["flops"])
+    cl = r.get("collective_bytes_corrected", r["collective_bytes"].get("total", 0))
+    print(
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} | "
+        f"{r['compile_s']}s | {r.get('argument_size_in_bytes',0)/1e9:.1f} GB | "
+        f"{r.get('temp_size_in_bytes',0)/1e9:.1f} GB | {fl/1e9:.0f} | {cl/1e9:.2f} |"
+    )
+
+print()
+print("<!-- ROOFLINE_TABLE -->")
+print("| arch | shape | step | compute s | memory s | collective s | dominant | useful ratio |")
+print("|---|---|---|---|---|---|---|---|")
+for r in recs:
+    if r["mesh"] != "16x16" or "probe_error" in r and False:
+        continue
+    if r["mesh"] != "16x16":
+        continue
+    terms, dom, mf, ratio = analyze_record(r)
+    print(
+        f"| {r['arch']} | {r['shape']} | {r['step']} | "
+        f"{terms['compute']:.3e} | {terms['memory']:.3e} | {terms['collective']:.3e} | "
+        f"**{dom}** | {ratio:.2f} |"
+    )

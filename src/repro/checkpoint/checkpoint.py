@@ -1,0 +1,72 @@
+"""Msgpack pytree checkpointing (params, optimizer state, step, metadata).
+
+Arrays are stored as (dtype, shape, raw bytes); the tree structure is
+path-keyed so restore does not need an example tree. Writes are atomic
+(tmp + rename) — a crashed save never corrupts the previous checkpoint.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        flat[key] = {
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    return flat
+
+
+def _path_str(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree, step: int = 0, meta: dict | None = None):
+    payload = {
+        "step": step,
+        "meta": meta or {},
+        "arrays": _flatten(tree),
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, example_tree=None):
+    """Returns (tree, step, meta). With example_tree the stored arrays are
+    mapped back into its structure (and dtypes cast to match); without it, a
+    flat {path: array} dict is returned."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    arrays = {
+        k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+        for k, v in payload["arrays"].items()
+    }
+    if example_tree is None:
+        return arrays, payload["step"], payload["meta"]
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = arrays[key]
+        leaves.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"], payload["meta"]

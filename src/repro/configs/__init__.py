@@ -1,0 +1,46 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Each assigned architecture has one module; ids use the assignment spelling.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    LayerSpec,
+    ModelConfig,
+    reduce_config,
+    shape_applicable,
+)
+
+_ARCH_MODULES = {
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "gemma3-27b": "gemma3_27b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "whisper-small": "whisper_small",
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "chatglm3-6b": "chatglm3_6b",
+    # the paper's own §4.2 model (not part of the assigned 10)
+    "albert-large": "albert_large",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _ARCH_MODULES if k != "albert-large")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    cfg: ModelConfig = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def list_archs(include_extra: bool = False):
+    return list(_ARCH_MODULES) if include_extra else list(ASSIGNED_ARCHS)

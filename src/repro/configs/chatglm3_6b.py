@@ -1,0 +1,27 @@
+"""ChatGLM3-6B dense decoder [arXiv:2406.12793].
+
+28 layers, d_model=4096, 32 heads (GQA kv=2), d_ff=13696, vocab=65024,
+2d RoPE (rotary applied to half of each head dim — the GLM convention).
+"""
+from repro.configs.base import ModelConfig, SA
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    pattern=(SA,),
+    n_repeats=28,
+    qkv_bias=True,  # GLM uses bias on QKV
+    rope="half",
+    rope_theta=10000.0,
+    norm="rmsnorm",
+    act="silu",
+    glu=True,
+    sub_quadratic=False,
+    source="arXiv:2406.12793",
+)

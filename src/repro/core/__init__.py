@@ -1,0 +1,10 @@
+"""BTARD — the paper's primary contribution as a composable JAX module."""
+from repro.core.centered_clip import (  # noqa: F401
+    centered_clip,
+    centered_clip_to_tol,
+    clip_residuals,
+    tau_schedule,
+)
+from repro.core.butterfly import butterfly_clip, merge_parts, split_parts  # noqa: F401
+from repro.core.protocol import AttackConfig, BTARDProtocol  # noqa: F401
+from repro.core.btard_sgd import BTARDTrainer, TrainerConfig  # noqa: F401

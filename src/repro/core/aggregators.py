@@ -1,0 +1,90 @@
+"""Baseline robust aggregators the paper compares against (§4.1):
+
+plain mean (All-Reduce), coordinate-wise median, geometric median
+(Weiszfeld run to eps), trimmed mean, Krum, and parameter-server
+CenteredClip. All take (n, d) stacked peer vectors -> (d,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.centered_clip import centered_clip, centered_clip_to_tol
+
+
+def mean_agg(xs, weights=None):
+    if weights is None:
+        return xs.mean(0)
+    w = weights / jnp.maximum(weights.sum(), 1e-30)
+    return (w[:, None] * xs).sum(0)
+
+
+def coordinate_median(xs, weights=None):
+    if weights is not None:
+        # replace banned rows by the median of active ones via +inf trick:
+        # simpler — select active rows assuming static mask in tests
+        big = jnp.where(weights[:, None] > 0, xs, jnp.nan)
+        return jnp.nanmedian(big, axis=0)
+    return jnp.median(xs, axis=0)
+
+
+def trimmed_mean(xs, trim_ratio=0.2, weights=None):
+    n = xs.shape[0]
+    k = int(n * trim_ratio)
+    s = jnp.sort(xs, axis=0)
+    if k:
+        s = s[k : n - k]
+    return s.mean(0)
+
+
+def geometric_median(xs, eps=1e-6, max_iters=200, weights=None):
+    """Weiszfeld iterations to convergence."""
+    n, d = xs.shape
+    w0 = jnp.ones((n,)) if weights is None else weights
+    v = (w0[:, None] * xs).sum(0) / jnp.maximum(w0.sum(), 1e-30)
+
+    def cond(state):
+        v, delta, it = state
+        return jnp.logical_and(delta > eps, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        dist = jnp.linalg.norm(xs - v[None], axis=1)
+        inv = w0 / jnp.maximum(dist, 1e-12)
+        v_new = (inv[:, None] * xs).sum(0) / jnp.maximum(inv.sum(), 1e-30)
+        return v_new, jnp.linalg.norm(v_new - v), it + 1
+
+    v, _, _ = jax.lax.while_loop(cond, body, (v, jnp.float32(jnp.inf), 0))
+    return v
+
+
+def krum(xs, n_byzantine: int, weights=None):
+    """Krum (Blanchard et al. 2017): pick the vector with the smallest sum of
+    distances to its n - b - 2 nearest neighbours."""
+    n = xs.shape[0]
+    d2 = jnp.sum((xs[:, None, :] - xs[None, :, :]) ** 2, axis=-1)  # (n, n)
+    d2 = d2 + jnp.eye(n) * 1e30
+    k = max(1, n - n_byzantine - 2)
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = nearest.sum(1)
+    if weights is not None:
+        scores = jnp.where(weights > 0, scores, jnp.inf)
+    return xs[jnp.argmin(scores)]
+
+
+def ps_centered_clip(xs, tau, eps=1e-6, weights=None):
+    """The original (trusted-parameter-server) CenteredClip baseline."""
+    v, _ = centered_clip_to_tol(xs, tau, eps=eps, weights=weights)
+    return v
+
+
+AGGREGATORS = {
+    "mean": mean_agg,
+    "coordinate_median": coordinate_median,
+    "trimmed_mean": trimmed_mean,
+    "geometric_median": geometric_median,
+    "krum": krum,
+    "centered_clip": ps_centered_clip,
+}

@@ -1,0 +1,92 @@
+"""The paper's attack zoo (§4.1): what Byzantine peers send instead of
+their honest gradients.
+
+All gradient attacks transform the stacked (n, d) gradient matrix given the
+Byzantine mask. LABEL FLIP is applied at gradient-computation time (it needs
+the loss), so the trainer handles it via ``needs_flipped_labels``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+def sign_flip(grads, byz_mask, *, lam=1000.0, **_):
+    """Each attacker sends -lam * its true gradient (paper amplifies by 1000)."""
+    return jnp.where(byz_mask[:, None], -lam * grads, grads)
+
+
+def random_direction(grads, byz_mask, *, key, lam=1000.0, **_):
+    """All attackers send a large common random vector."""
+    v = jax.random.normal(key, (grads.shape[1],), grads.dtype)
+    v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+    scale = lam * jnp.linalg.norm(grads, axis=1).mean()
+    return jnp.where(byz_mask[:, None], (scale * v)[None, :], grads)
+
+
+def delayed_gradient(grads, byz_mask, *, delayed, **_):
+    """Attackers send their real gradients delayed by D steps (trainer keeps
+    the history buffer and passes the delayed rows)."""
+    return jnp.where(byz_mask[:, None], delayed, grads)
+
+
+def ipm(grads, byz_mask, *, epsilon=0.6, **_):
+    """Inner-product manipulation (Xie et al. 2020): attackers send
+    -epsilon * mean(honest gradients)."""
+    hon = ~byz_mask
+    denom = jnp.maximum(hon.sum(), 1)
+    mu = (grads * hon[:, None]).sum(0) / denom
+    return jnp.where(byz_mask[:, None], (-epsilon * mu)[None, :], grads)
+
+
+def alie(grads, byz_mask, **_):
+    """A Little Is Enough (Baruch et al. 2019): collude to shift the
+    coordinate-wise statistics while staying inside the population variance.
+
+    z_max = Phi^{-1}((n - b - s) / (n - b)),  s = floor(n/2) + 1 - b.
+    Attackers send mu - z_max * sigma (coordinate-wise over honest peers).
+    """
+    n = grads.shape[0]
+    b = byz_mask.sum()
+    hon = ~byz_mask
+    denom = jnp.maximum(hon.sum(), 1)
+    mu = (grads * hon[:, None]).sum(0) / denom
+    var = ((grads - mu[None]) ** 2 * hon[:, None]).sum(0) / jnp.maximum(denom - 1, 1)
+    sigma = jnp.sqrt(var)
+    s = jnp.floor_divide(n, 2) + 1 - b
+    q = jnp.clip((n - b - s) / jnp.maximum(n - b, 1), 1e-4, 1 - 1e-4)
+    z_max = ndtri(q.astype(jnp.float64) if False else q.astype(jnp.float32))
+    mal = mu - z_max * sigma
+    return jnp.where(byz_mask[:, None], mal[None, :], grads)
+
+
+def label_flip(grads, byz_mask, **_):
+    """Marker: handled at gradient computation (loss with flipped labels)."""
+    return grads
+
+
+GRADIENT_ATTACKS = {
+    "none": lambda g, m, **kw: g,
+    "sign_flip": sign_flip,
+    "random_direction": random_direction,
+    "label_flip": label_flip,
+    "delayed_gradient": delayed_gradient,
+    "ipm_01": lambda g, m, **kw: ipm(g, m, epsilon=0.1),
+    "ipm_06": lambda g, m, **kw: ipm(g, m, epsilon=0.6),
+    "alie": alie,
+}
+
+NEEDS_FLIPPED_LABELS = {"label_flip"}
+NEEDS_DELAY_BUFFER = {"delayed_gradient"}
+
+
+# ---------------------------------------------------------------------------
+# Aggregator-side attacks (a Byzantine peer aggregating a partition lies)
+# ---------------------------------------------------------------------------
+def aggregator_shift(agg_part, key, scale):
+    """Malicious aggregator adds a bounded random shift to its partition
+    (bounded because Verification 3 / Delta_max votes catch large ones)."""
+    noise = jax.random.normal(key, agg_part.shape, agg_part.dtype)
+    noise = noise / jnp.maximum(jnp.linalg.norm(noise), 1e-30)
+    return agg_part + scale * noise

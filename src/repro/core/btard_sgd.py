@@ -1,0 +1,173 @@
+"""BTARD-SGD / BTARD-Clipped-SGD training loops (paper Alg. 7 / 9) plus the
+restarted strongly-convex variants (Alg. 8) and PS-baseline defenses.
+
+The trainer simulates n peers on one host: per-peer gradients from PUBLIC
+minibatch seeds (the paper's homogeneous-data assumption), the full BTARD
+protocol (core.protocol) between SGD steps, and any optimizer from
+repro.optim applied to the robust aggregate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import AGGREGATORS
+from repro.core import attacks as attacks_mod
+from repro.core.protocol import AttackConfig, BTARDProtocol
+from repro.optim import sgd
+from repro.optim.optimizers import apply_updates
+
+
+@dataclass
+class TrainerConfig:
+    n_peers: int = 16
+    byzantine: tuple = ()
+    attack: AttackConfig = field(default_factory=AttackConfig)
+    defense: str = "btard"  # btard | mean | coordinate_median | geometric_median | trimmed_mean | krum | centered_clip
+    tau: float = 1.0
+    clip_iters: int = 60
+    m_validators: int = 1
+    delta_max: float | None = None
+    clip_lambda: float | None = None  # enables BTARD-Clipped-SGD
+    seed: int = 0
+
+
+class BTARDTrainer:
+    """loss_fn(params, batch) -> scalar;  batch_fn(peer, step, flipped) -> batch."""
+
+    def __init__(self, loss_fn, params0, batch_fn, cfg: TrainerConfig, optimizer=None):
+        self.cfg = cfg
+        self.batch_fn = batch_fn
+        flat0, self._unravel = ravel_pytree(params0)
+        self.params = np.asarray(flat0, np.float32)
+        self.d = self.params.size
+        self.opt = optimizer or sgd(0.05, momentum=0.9, nesterov=True)
+        self._opt_state = self.opt.init(jnp.asarray(self.params))
+        self._loss = loss_fn
+        self._grad = jax.jit(
+            lambda flat, batch: ravel_pytree(
+                jax.grad(lambda p: loss_fn(p, batch))(self._unravel(flat))
+            )[0]
+        )
+        self.protocol = BTARDProtocol(
+            n_peers=cfg.n_peers,
+            d=self.d,
+            grad_fn=self._peer_grad,
+            byzantine=set(cfg.byzantine),
+            attack=cfg.attack,
+            tau=cfg.tau,
+            clip_iters=cfg.clip_iters,
+            m_validators=cfg.m_validators,
+            delta_max=cfg.delta_max,
+            clip_lambda=cfg.clip_lambda,
+            seed=cfg.seed,
+        )
+        self.history: list = []
+        self._step = 0
+
+    # ------------------------------------------------------------------
+    def _peer_grad(self, peer, step, params_flat, flipped=False):
+        batch = self.batch_fn(peer, step, flipped)
+        return self._grad(jnp.asarray(params_flat), batch)
+
+    def _baseline_step(self, t):
+        """PS-style defense baselines: stacked grads -> robust aggregate."""
+        cfg = self.cfg
+        active = list(range(cfg.n_peers))
+        byz_mask = np.array([i in set(cfg.byzantine) for i in active])
+        flip = (
+            cfg.attack.kind == "label_flip"
+            and cfg.attack.start_step <= t < cfg.attack.end_step
+        )
+        G = np.stack(
+            [
+                np.asarray(
+                    self._peer_grad(i, t, self.params, flipped=flip and byz_mask[idx])
+                )
+                for idx, i in enumerate(active)
+            ]
+        )
+        if (
+            cfg.attack.kind not in ("none", "label_flip")
+            and cfg.attack.start_step <= t < cfg.attack.end_step
+        ):
+            fn = attacks_mod.GRADIENT_ATTACKS[cfg.attack.kind]
+            G = np.asarray(
+                fn(
+                    jnp.asarray(G),
+                    jnp.asarray(byz_mask),
+                    key=jax.random.key(t),
+                    lam=cfg.attack.lam,
+                )
+            )
+        agg_fn = AGGREGATORS[cfg.defense]
+        if cfg.defense == "krum":
+            g = agg_fn(jnp.asarray(G), n_byzantine=int(byz_mask.sum()))
+        elif cfg.defense == "centered_clip":
+            g = agg_fn(jnp.asarray(G), tau=cfg.tau)
+        else:
+            g = agg_fn(jnp.asarray(G))
+        return np.asarray(g), None
+
+    # ------------------------------------------------------------------
+    def train_step(self):
+        t = self._step
+        if self.cfg.defense == "btard":
+            g, info = self.protocol.step(self.params, t)
+        else:
+            g, info = self._baseline_step(t)
+        updates, self._opt_state = self.opt.update(
+            jnp.asarray(g), self._opt_state, jnp.asarray(self.params), t
+        )
+        self.params = np.asarray(
+            apply_updates(jnp.asarray(self.params), updates), np.float32
+        )
+        self._step += 1
+        return g, info
+
+    def run(self, n_steps, eval_fn=None, eval_every=10, log=None):
+        for _ in range(n_steps):
+            g, info = self.train_step()
+            rec = {
+                "step": self._step - 1,
+                "grad_norm": float(np.linalg.norm(g)),
+                "n_banned": len(self.protocol.banned),
+            }
+            if info is not None:
+                rec["banned_now"] = info.banned_now
+            if eval_fn is not None and (self._step - 1) % eval_every == 0:
+                rec["eval"] = float(eval_fn(self.unraveled_params()))
+            self.history.append(rec)
+            if log:
+                log(rec)
+        return self.history
+
+    def unraveled_params(self):
+        return self._unravel(jnp.asarray(self.params))
+
+    @property
+    def banned(self):
+        return set(self.protocol.banned)
+
+
+# ---------------------------------------------------------------------------
+# Restarted variants (paper Alg. 8): re-launch with halved radius schedule.
+# ---------------------------------------------------------------------------
+def restarted_btard_sgd(
+    make_trainer, n_restarts: int, steps_fn, lr_fn,
+):
+    """make_trainer(lr, params0) -> BTARDTrainer; steps_fn(t)/lr_fn(t) give
+    per-restart budgets (paper eq. (44)-(45): gamma_t ~ 2^{-t/2}, K_t ~ 2^t).
+    Returns (final params pytree, history)."""
+    params = None
+    history = []
+    for r in range(n_restarts):
+        tr = make_trainer(lr_fn(r), params)
+        tr.run(steps_fn(r))
+        params = tr.unraveled_params()
+        history.extend([{**h, "restart": r} for h in tr.history])
+    return params, history

@@ -1,0 +1,116 @@
+"""ButterflyClip numerics (paper Alg. 2/5) + the O(n^2)-scalar verification
+tables (Alg. 6): pure-jnp, shape (n_peers, d) -> robust average (d,).
+
+Two call modes share this math:
+  * simulated — stacked peer axis on one device (tests, controlled §4.1 runs);
+  * distributed — launch/train.py wraps the same per-partition CenteredClip
+    in a shard_map all_to_all/all_gather over the mesh peer axes.
+
+Partitioning pads d to a multiple of n (the paper's SPLIT uses uneven parts;
+padding with zeros is numerically identical for aggregation and keeps XLA
+shapes static — recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.centered_clip import centered_clip, clip_residuals
+
+
+def pad_to_parts(d: int, n: int) -> int:
+    return -(-d // n) * n
+
+
+def split_parts(grads, n_parts):
+    """(n, d) -> (n, n_parts, part) with zero padding."""
+    n, d = grads.shape
+    dp = pad_to_parts(d, n_parts)
+    if dp != d:
+        grads = jnp.pad(grads, ((0, 0), (0, dp - d)))
+    return grads.reshape(n, n_parts, dp // n_parts)
+
+
+def merge_parts(agg, d):
+    """(n_parts, part) -> (d,)."""
+    return agg.reshape(-1)[:d]
+
+
+def butterfly_clip(grads, tau, n_iters: int = 50, weights=None, use_pallas=False):
+    """Robust butterfly all-reduce: partition j is CenteredClip-aggregated
+    across peers (by peer j in the real topology). Returns (agg_parts, parts).
+
+    grads: (n, d). agg_parts: (n_parts, part). parts: (n, n_parts, part).
+    use_pallas: run the aggregation through the fused all-partition TPU
+    kernel (kernels/centered_clip.butterfly_clip_pallas).
+    """
+    n = grads.shape[0]
+    parts = split_parts(grads, n)
+
+    if use_pallas:
+        from repro.kernels.ops import butterfly_clip_op
+
+        agg = butterfly_clip_op(
+            jnp.swapaxes(parts, 0, 1), tau, weights, n_iters=n_iters
+        )
+        return agg, parts
+
+    clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
+    agg = jax.vmap(lambda xs: clip(xs))(jnp.swapaxes(parts, 0, 1))  # (n_parts, part)
+    return agg, parts
+
+
+def get_random_directions(seed, n_parts: int, part: int):
+    """z[j] — unit vector per partition from the MPRNG seed (Alg. 1 L5).
+
+    Every peer derives the same z from the shared scalar seed, AFTER all
+    aggregation hashes are committed.
+    """
+    key = jax.random.key(seed) if jnp.ndim(seed) == 0 else seed
+    z = jax.random.normal(key, (n_parts, part), jnp.float32)
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=1, keepdims=True), 1e-30)
+
+
+def verification_tables(parts, agg, z, tau):
+    """Broadcast tables of Alg. 6: s[i, j] = <z[j], Delta_i^j>, norm[i, j].
+
+    parts: (n, n_parts, part); agg: (n_parts, part); z: (n_parts, part).
+    """
+    def per_part(xs_j, v_j, z_j):
+        deltas = clip_residuals(xs_j, v_j, tau)  # (n, part)
+        s_j = deltas.astype(jnp.float32) @ z_j.astype(jnp.float32)
+        norms_j = jnp.linalg.norm((xs_j - v_j[None]).astype(jnp.float32), axis=1)
+        return s_j, norms_j
+
+    s, norms = jax.vmap(per_part, in_axes=(1, 0, 0), out_axes=1)(parts, agg, z)
+    return s, norms  # both (n, n_parts)
+
+
+def checksum_violations(s, weights, tol):
+    """Verification 2 checksum: |sum_i s_i^j| per partition (Alg. 1 L14).
+
+    Returns (sums (n_parts,), violated (n_parts,) bool).
+    """
+    w = s if weights is None else s * weights[:, None]
+    sums = w.sum(0)
+    return sums, jnp.abs(sums) > tol
+
+
+def delta_max_votes(norms, weights, delta_max):
+    """Verification 3: fraction of active peers whose partition residual
+    exceeds Delta_max; a majority vote triggers CHECKAVERAGING(j)."""
+    active = norms.shape[0] if weights is None else jnp.maximum(weights.sum(), 1.0)
+    check = norms > delta_max  # (n, n_parts)
+    if weights is not None:
+        check = check & (weights[:, None] > 0)
+    votes = check.sum(0)
+    return votes, votes > active / 2.0
+
+
+def checksum_tolerance(agg, parts, rel=1e-3):
+    """Numerical tolerance for the zero checksum: the fixed point is solved
+    to finite precision, so scale by the residual magnitude."""
+    scale = jnp.linalg.norm(parts.astype(jnp.float32), axis=-1).mean()
+    return rel * jnp.maximum(scale, 1e-6)

@@ -1,0 +1,108 @@
+"""CenteredClip (Karimireddy et al. 2020) — the robust mean at BTARD's heart.
+
+Fixed-point iteration (paper eq. (CenteredClip)):
+    v_{l+1} = v_l + (1/n) sum_i (x_i - v_l) * min(1, tau_l / ||x_i - v_l||)
+
+with the paper's tau schedule eq. (5):
+    tau_l = 4 * sqrt((1 - delta) * (B_l^2/3 + sigma^2) / (sqrt(3) * delta))
+    B_{l+1}^2 = 6.45 * delta * B_l^2 + 5 * sigma^2
+
+tau -> inf recovers the mean; tau -> 0 approaches the geometric median
+(paper App. D.2). ``weights`` masks banned peers (Alg. 7 bans).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tau_schedule(delta: float, sigma: float, n_iters: int, b0: float = 0.0):
+    """Paper eq. (5). delta=0 => tau = inf (plain mean)."""
+    taus = []
+    b2 = float(b0) ** 2
+    for _ in range(n_iters):
+        if delta <= 0.0:
+            taus.append(np.inf)
+        else:
+            taus.append(
+                4.0
+                * np.sqrt(
+                    (1.0 - delta) * (b2 / 3.0 + sigma**2) / (np.sqrt(3.0) * delta)
+                )
+            )
+        b2 = 6.45 * delta * b2 + 5.0 * sigma**2
+    return np.asarray(taus, np.float32)
+
+
+def _clip_weights(diff_norm, tau):
+    """min(1, tau/||.||), safe at 0; tau=inf -> 1."""
+    w = jnp.minimum(1.0, tau / jnp.maximum(diff_norm, 1e-30))
+    return jnp.where(jnp.isinf(tau), 1.0, w)
+
+
+def centered_clip(xs, tau, n_iters: int = 20, weights=None, v0=None):
+    """Robust aggregate of ``xs``: (n, d) -> (d,).
+
+    tau: scalar or per-iteration (n_iters,) schedule.
+    weights: optional (n,) peer mask (0 = banned). Result is the CenteredClip
+    fixed point over the active peers.
+    """
+    xs = jnp.asarray(xs)
+    n, d = xs.shape
+    if weights is None:
+        weights = jnp.ones((n,), xs.dtype)
+    wsum = jnp.maximum(weights.sum(), 1e-30)
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    # v0 = 0 (or the caller's warm start, e.g. last step's aggregate): with a
+    # mean init, amplified attacks (|g_byz| >> tau) put v0 so far out that the
+    # <= tau-per-iteration pull can never escape — matching Karimireddy's
+    # implementation, which warm-starts from the previous aggregate.
+    # Iteration runs in f32 regardless of the (possibly bf16) input dtype.
+    v = jnp.zeros((d,), jnp.float32) if v0 is None else v0.astype(jnp.float32)
+    xs_f = xs.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+
+    def body(l, v):
+        diff = xs_f - v[None, :]
+        norms = jnp.linalg.norm(diff, axis=1)
+        cw = _clip_weights(norms, taus[l]) * weights
+        return v + (cw[:, None] * diff).sum(0) / wsum
+
+    return jax.lax.fori_loop(0, n_iters, body, v)
+
+
+def centered_clip_to_tol(xs, tau, eps: float = 1e-6, max_iters: int = 200, weights=None):
+    """Run CenteredClip to convergence ||v_{l+1}-v_l|| <= eps (paper §4.1
+    runs 'iterative algorithms to convergence with eps=1e-6')."""
+    xs = jnp.asarray(xs)
+    n, d = xs.shape
+    if weights is None:
+        weights = jnp.ones((n,), xs.dtype)
+    wsum = jnp.maximum(weights.sum(), 1e-30)
+    v = jnp.zeros((d,), xs.dtype)
+
+    def cond(state):
+        v, delta, it = state
+        return jnp.logical_and(delta > eps, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        diff = xs - v[None, :]
+        norms = jnp.linalg.norm(diff.astype(jnp.float32), axis=1)
+        cw = _clip_weights(norms, jnp.float32(tau)) * weights
+        step = (cw[:, None] * diff).sum(0) / wsum
+        return v + step, jnp.linalg.norm(step.astype(jnp.float32)), it + 1
+
+    v, _, iters = jax.lax.while_loop(cond, body, (v, jnp.float32(jnp.inf), 0))
+    return v, iters
+
+
+def clip_residuals(xs, v, tau):
+    """Delta_i = (x_i - v) * min(1, tau/||x_i - v||)  (paper Alg. 1 L7).
+
+    At the exact fixed point sum_i Delta_i = 0 — the basis of Verification 2.
+    """
+    diff = xs - v[None, :]
+    norms = jnp.linalg.norm(diff.astype(jnp.float32), axis=1)
+    return diff * _clip_weights(norms, jnp.float32(tau))[:, None]

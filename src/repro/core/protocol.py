@@ -1,0 +1,389 @@
+"""BTARD host-level protocol state machine (paper Alg. 4–7).
+
+This is the faithful protocol simulation: sha256 gradient commitments,
+MPRNG commit/reveal for the shared seed, broadcast tables of s / norm
+scalars, Verifications 1–3, ACCUSE (recompute & ban, Alg. 4) and ELIMINATE
+(mutual ban), random validator election, and deterministic ban ordering
+(sorted accusations — App. D.3).
+
+The numeric aggregation itself (CenteredClip over butterfly partitions) runs
+on device via repro.core.butterfly; everything a real deployment would do in
+host-side RPC / crypto land lives here in plain Python over a simulated
+consistent broadcast channel.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attacks as attacks_mod
+from repro.core import butterfly as bf
+from repro.core.centered_clip import centered_clip
+from repro.core.mprng import MPRNGPeer, run_mprng
+
+
+def grad_hash(g: np.ndarray) -> bytes:
+    return hashlib.sha256(np.ascontiguousarray(g, np.float32).tobytes()).digest()
+
+
+@dataclass
+class AttackConfig:
+    kind: str = "none"  # see core.attacks.GRADIENT_ATTACKS
+    start_step: int = 0
+    end_step: int = 10**9
+    lam: float = 1000.0
+    delay: int = 1000
+    aggregator_attack: bool = False
+    aggregator_scale: float = 0.0  # shift magnitude per corrupted partition
+    misreport_s: bool = True  # colluders cancel the Verification-2 checksum
+    false_accuse: bool = False  # byz validators slander honest peers
+    mprng_abort: bool = False  # byz peers try the abort-bias on MPRNG
+
+
+@dataclass
+class StepInfo:
+    step: int
+    banned_now: list = field(default_factory=list)
+    accusations: list = field(default_factory=list)
+    checksum_violations: int = 0
+    check_averaging: int = 0
+    validators: list = field(default_factory=list)
+    n_active: int = 0
+    seed: int = 0
+
+
+class BTARDProtocol:
+    """One instance simulates all peers plus the broadcast channel.
+
+    grad_fn(peer_id, step, params, flipped) -> np.ndarray (d,)
+        Deterministic given (peer_id, step): the paper's public minibatch
+        seed xi_i^t, so any peer can recompute any other's gradient.
+    """
+
+    def __init__(
+        self,
+        n_peers: int,
+        d: int,
+        grad_fn,
+        byzantine: set,
+        attack: AttackConfig | None = None,
+        tau: float = 1.0,
+        clip_iters: int = 60,
+        m_validators: int = 1,
+        delta_max: float | None = None,
+        clip_lambda: float | None = None,  # BTARD-Clipped-SGD peer-side clip
+        seed: int = 0,
+    ):
+        self.n = n_peers
+        self.d = d
+        self.grad_fn = grad_fn
+        self.byzantine = set(byzantine)
+        self.attack = attack or AttackConfig()
+        self.tau = tau
+        self.clip_iters = clip_iters
+        self.m = m_validators
+        self.delta_max = delta_max
+        self.clip_lambda = clip_lambda
+        self.rng = np.random.default_rng(seed)
+        self.banned: set = set()
+        self.validators: list = []  # C_k — chosen at the END of step k-1
+        self._delay_buf: dict = {}
+        self._jit_bclip = jax.jit(
+            lambda g, w: bf.butterfly_clip(
+                g, tau=self.tau, n_iters=self.clip_iters, weights=w
+            )
+        )
+        self._jit_tables = jax.jit(bf.verification_tables, static_argnums=())
+
+    # ------------------------------------------------------------------
+    def active_peers(self):
+        return [i for i in range(self.n) if i not in self.banned]
+
+    def _is_attacking(self, t):
+        a = self.attack
+        any_attack = (
+            a.kind != "none" or a.aggregator_attack or a.false_accuse or a.mprng_abort
+        )
+        return any_attack and a.start_step <= t < a.end_step
+
+    # ------------------------------------------------------------------
+    def _compute_peer_grads(self, params, t, active):
+        """Step 1–2: everyone computes gradients from public seeds; Byzantine
+        peers substitute their attack vectors (and commit to THOSE — an
+        inconsistent commitment would be an instant ELIMINATE)."""
+        flip = self._is_attacking(t) and self.attack.kind == "label_flip"
+        grads, honest = [], []
+        for i in active:
+            flipped = flip and i in self.byzantine
+            g = np.asarray(self.grad_fn(i, t, params, flipped), np.float32)
+            grads.append(g)
+            # a validator recomputing from the PUBLIC seed gets true labels:
+            honest.append(
+                np.asarray(self.grad_fn(i, t, params, False), np.float32)
+                if flipped
+                else g
+            )
+        G = np.stack(grads)  # (n_active, d)
+        honest_G = np.stack(honest)
+
+        if self._is_attacking(t):
+            byz_mask = np.array([i in self.byzantine for i in active])
+            kind = self.attack.kind
+            if kind in attacks_mod.NEEDS_DELAY_BUFFER:
+                delayed = np.stack(
+                    [
+                        self._delay_buf.get(
+                            (i, t - self.attack.delay),
+                            np.zeros(self.d, np.float32),
+                        )
+                        for i in active
+                    ]
+                )
+                G = np.asarray(
+                    attacks_mod.delayed_gradient(
+                        jnp.asarray(G), jnp.asarray(byz_mask), delayed=jnp.asarray(delayed)
+                    )
+                )
+            elif kind != "label_flip":
+                fn = attacks_mod.GRADIENT_ATTACKS[kind]
+                G = np.asarray(
+                    fn(
+                        jnp.asarray(G),
+                        jnp.asarray(byz_mask),
+                        key=jax.random.key(t),
+                        lam=self.attack.lam,
+                    )
+                )
+        # history for the delayed attack
+        for idx, i in enumerate(active):
+            if i in self.byzantine:
+                self._delay_buf[(i, t)] = honest_G[idx]
+        # drop old history
+        for key in [k for k in self._delay_buf if k[1] < t - self.attack.delay - 2]:
+            del self._delay_buf[key]
+        return G, honest_G
+
+    # ------------------------------------------------------------------
+    def step(self, params, t):
+        """One BTARD-SGD aggregation round. Returns (g_hat (d,), StepInfo)."""
+        info = StepInfo(step=t)
+        active = self.active_peers()
+        n_act = len(active)
+        info.n_active = n_act
+        validators = [v for v in self.validators if v not in self.banned]
+        info.validators = list(validators)
+        # weight 0 for this step's validators (they validate instead — Alg. 1 L19)
+        weights = np.array(
+            [0.0 if i in validators else 1.0 for i in active], np.float32
+        )
+
+        G, honest_G = self._compute_peer_grads(params, t, active)
+        G = np.array(G)  # ensure writable (attack outputs are jax views)
+        honest_G = np.array(honest_G)
+        if self.clip_lambda is not None:  # BTARD-Clipped-SGD (Alg. 9, honest peers)
+            for idx, i in enumerate(active):
+                if i not in self.byzantine:
+                    nrm = np.linalg.norm(G[idx])
+                    G[idx] *= min(1.0, self.clip_lambda / max(nrm, 1e-30))
+                    honest_G[idx] = G[idx]
+
+        # ---- commitments (broadcast BEFORE any aggregation data flows) ----
+        commitments = {i: grad_hash(G[idx]) for idx, i in enumerate(active)}
+
+        # ---- butterfly exchange + per-partition CenteredClip ---------------
+        agg, parts = self._jit_bclip(jnp.asarray(G), jnp.asarray(weights))
+        agg = np.array(agg)  # writable copy
+        parts_np = np.asarray(parts)
+        honest_agg = agg.copy()
+
+        # aggregation attack: byzantine aggregators corrupt their partitions
+        corrupted_parts = []
+        if self._is_attacking(t) and self.attack.aggregator_attack:
+            for j_idx, j in enumerate(active):
+                if j in self.byzantine and self.attack.aggregator_scale > 0:
+                    noise = self.rng.normal(size=agg.shape[1]).astype(np.float32)
+                    noise /= max(np.linalg.norm(noise), 1e-30)
+                    agg[j_idx] = agg[j_idx] + self.attack.aggregator_scale * noise
+                    corrupted_parts.append(j_idx)
+
+        # ---- hash of aggregation results broadcast BEFORE z is known -------
+        agg_hashes = {active[j]: grad_hash(agg[j]) for j in range(n_act)}
+
+        # ---- MPRNG: shared seed (commit/reveal) ----------------------------
+        peers = [MPRNGPeer(i) for i in active]
+        if self.attack.mprng_abort and self._is_attacking(t):
+            from repro.core.mprng import AbortingPeer
+
+            peers = [
+                AbortingPeer(i) if i in self.byzantine else MPRNGPeer(i)
+                for i in active
+            ]
+        seed, mprng_banned, _ = run_mprng(peers, self.rng)
+        for i in mprng_banned:
+            self._ban(i, info, "mprng abort/mismatch")
+        info.seed = seed % (2**31)
+
+        z = np.asarray(bf.get_random_directions(info.seed, agg.shape[0], agg.shape[1]))
+
+        # ---- broadcast tables s_i^j, norm_ij --------------------------------
+        s_tbl, norm_tbl = self._jit_tables(
+            jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z), self.tau
+        )
+        s_tbl = np.asarray(s_tbl).copy()  # (n_act, n_parts)
+        norm_tbl = np.asarray(norm_tbl).copy()
+        true_s = s_tbl.copy()
+        true_norm = norm_tbl.copy()
+
+        # colluders cancel the checksum for corrupted partitions (App. C:
+        # "Byzantines can misreport s_i^j such that sum_i s_i^j = 0")
+        misreporters = []
+        if corrupted_parts and self.attack.misreport_s:
+            byz_rows = [
+                idx for idx, i in enumerate(active) if i in self.byzantine
+            ]
+            for j_idx in corrupted_parts:
+                liar = byz_rows[0]
+                others = (s_tbl[:, j_idx] * weights).sum() - s_tbl[liar, j_idx] * weights[liar]
+                if weights[liar] > 0:
+                    s_tbl[liar, j_idx] = -others / weights[liar]
+                    misreporters.append((active[liar], active[j_idx]))
+
+        # ---- Verifications --------------------------------------------------
+        accusations = []  # (accuser, target, reason)
+
+        # V1: each aggregator j can verify everyone's norm for its partition
+        for j_idx, j in enumerate(active):
+            if j in self.byzantine:
+                continue  # byzantine aggregators stay silent
+            bad = np.nonzero(
+                np.abs(norm_tbl[:, j_idx] - true_norm[:, j_idx])
+                > 1e-4 * (1.0 + true_norm[:, j_idx])
+            )[0]
+            for i_idx in bad:
+                accusations.append((j, active[i_idx], "norm mismatch (V1)"))
+
+        # V2a: each aggregator j verifies everyone's s for its partition
+        for j_idx, j in enumerate(active):
+            if j in self.byzantine:
+                continue
+            bad = np.nonzero(
+                np.abs(s_tbl[:, j_idx] - true_s[:, j_idx])
+                > 1e-4 * (1.0 + np.abs(true_s[:, j_idx]))
+            )[0]
+            for i_idx in bad:
+                accusations.append((j, active[i_idx], "s mismatch (V2)"))
+
+        # V2b: global checksum per partition
+        tol = float(
+            bf.checksum_tolerance(jnp.asarray(agg), jnp.asarray(parts_np))
+        )
+        sums = (s_tbl * weights[:, None]).sum(0)
+        for j_idx in np.nonzero(np.abs(sums) > tol)[0]:
+            info.checksum_violations += 1
+            accusations.append((None, active[j_idx], "checksum != 0 (V2)"))
+
+        # V3: Delta_max majority vote -> CHECKAVERAGING
+        if self.delta_max is not None:
+            votes = ((true_norm > self.delta_max) * weights[:, None]).sum(0)
+            for j_idx in np.nonzero(votes > weights.sum() / 2.0)[0]:
+                info.check_averaging += 1
+                accusations.append(
+                    (None, active[j_idx], "Delta_max majority (V3)")
+                )
+
+        # ---- validator checks (C_k elected by last step's MPRNG) ------------
+        targets = self._choose_targets(info.seed - 1, active, validators)
+        for v, u in targets.items():
+            if v in self.byzantine:
+                if self._is_attacking(t) and self.attack.false_accuse:
+                    accusations.append((v, u, "false accusation"))
+                continue  # silent byzantine validator
+            u_idx = active.index(u)
+            honest = honest_G[u_idx]
+            if grad_hash(G[u_idx]) != grad_hash(honest) or not np.allclose(
+                G[u_idx], honest
+            ):
+                accusations.append((v, u, "gradient hash mismatch (validator)"))
+            elif np.abs(s_tbl[u_idx] - true_s[u_idx]).max() > 1e-4 * (
+                1.0 + np.abs(true_s[u_idx]).max()
+            ):
+                accusations.append((v, u, "s mismatch (validator)"))
+
+        # ---- ACCUSE resolution (deterministic order, App. D.3) --------------
+        for accuser, target, reason in sorted(
+            accusations, key=lambda a: (a[1], -1 if a[0] is None else a[0], a[2])
+        ):
+            if target in self.banned or (accuser is not None and accuser in self.banned):
+                continue
+            guilty = self._resolve_accusation(
+                accuser, target, reason, active, G, honest_G,
+                agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
+            )
+            info.accusations.append((accuser, target, reason, guilty))
+            for g in guilty:
+                self._ban(g, info, reason)
+
+        # ---- elect next validators ------------------------------------------
+        self.validators = self._elect_validators(info.seed, self.active_peers())
+
+        g_hat = bf.merge_parts(jnp.asarray(agg), self.d)
+        return np.asarray(g_hat), info
+
+    # ------------------------------------------------------------------
+    def _resolve_accusation(
+        self, accuser, target, reason, active, G, honest_G,
+        agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
+    ):
+        """ACCUSE (Alg. 4): everyone recomputes the target's work from the
+        public seed. Returns the set of peers proven guilty (the target if
+        the accusation holds, else the accuser). A false accusation bans the
+        accuser (Hammurabi rule)."""
+        t_idx = active.index(target)
+        guilty = set()
+        target_cheated = (
+            not np.allclose(G[t_idx], honest_G[t_idx])  # gradient attack
+            or not np.allclose(s_tbl[t_idx], true_s[t_idx], atol=1e-5, rtol=1e-3)
+            or not np.allclose(norm_tbl[t_idx], true_norm[t_idx], atol=1e-5, rtol=1e-3)
+            or not np.allclose(agg[t_idx], honest_agg[t_idx])  # aggregation attack
+        )
+        if target_cheated:
+            guilty.add(target)
+            # "and everyone who covered it up" (Alg. 4 L11-13): peers whose
+            # reported s for the corrupted partition mismatches their true s
+            liars = np.nonzero(
+                np.abs(s_tbl[:, t_idx] - true_s[:, t_idx])
+                > 1e-4 * (1.0 + np.abs(true_s[:, t_idx]))
+            )[0]
+            for l_idx in liars:
+                guilty.add(active[l_idx])
+        elif accuser is not None:
+            guilty.add(accuser)
+        return guilty
+
+    def _ban(self, peer, info, reason):
+        if peer not in self.banned:
+            self.banned.add(peer)
+            info.banned_now.append((peer, reason))
+
+    # ------------------------------------------------------------------
+    def _elect_validators(self, seed, active):
+        if not active or self.m == 0:
+            return []
+        r = np.random.default_rng(seed & 0x7FFFFFFF)
+        m = min(self.m, max(0, len(active) - 1))
+        return list(r.choice(active, size=m, replace=False))
+
+    def _choose_targets(self, seed, active, validators):
+        """CHOOSETARGET(r, i): each validator checks one non-validator."""
+        cands = [i for i in active if i not in validators]
+        if not cands:
+            return {}
+        r = np.random.default_rng((seed + 12345) & 0x7FFFFFFF)
+        out = {}
+        for v in validators:
+            out[v] = int(r.choice(cands))
+        return out

@@ -1,0 +1,66 @@
+"""Sybil-resistance heuristic (paper §3.3 / App. F).
+
+A new peer joining mid-run must prove continuous honest work before it is
+counted: for ``probation_steps`` consecutive steps it computes gradients from
+its assigned public seeds and broadcasts commitments; existing peers spot-
+check them (same validator machinery). Only after a clean probation does the
+peer enter the active set — so a Sybil attacker's influence stays
+proportional to its actual compute, not to how many identities it forges.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.protocol import grad_hash
+
+
+@dataclass
+class JoinRequest:
+    peer_id: int
+    joined_at: int
+    clean_steps: int = 0
+    dishonest: bool = False  # simulation: does this identity actually compute?
+
+
+class SybilGate:
+    """Tracks probation for joining peers; spot-checks their commitments."""
+
+    def __init__(self, grad_fn, probation_steps: int = 20, check_prob: float = 0.5, seed: int = 0):
+        self.grad_fn = grad_fn
+        self.probation = probation_steps
+        self.check_prob = check_prob
+        self.rng = np.random.default_rng(seed)
+        self.pending: dict[int, JoinRequest] = {}
+        self.admitted: list[int] = []
+        self.rejected: list[int] = []
+
+    def request_join(self, peer_id: int, step: int, dishonest: bool = False):
+        self.pending[peer_id] = JoinRequest(peer_id, step, dishonest=dishonest)
+
+    def step(self, params, t):
+        """One probation round: each pending peer submits a gradient hash;
+        admitted once `probation` clean (spot-checked) rounds accumulate."""
+        done = []
+        for pid, req in self.pending.items():
+            honest = np.asarray(self.grad_fn(pid, t, params, False), np.float32)
+            if req.dishonest:
+                # a Sybil identity with no compute behind it sends garbage
+                submitted = self.rng.normal(size=honest.shape).astype(np.float32)
+            else:
+                submitted = honest
+            commitment = grad_hash(submitted)
+            if self.rng.random() < self.check_prob:
+                if commitment != grad_hash(honest):
+                    req.dishonest_caught = True
+                    self.rejected.append(pid)
+                    done.append(pid)
+                    continue
+            req.clean_steps += 1
+            if req.clean_steps >= self.probation:
+                self.admitted.append(pid)
+                done.append(pid)
+        for pid in done:
+            self.pending.pop(pid, None)
+        return list(self.admitted), list(self.rejected)

@@ -1,0 +1,83 @@
+"""Deterministic public-seed data pipeline.
+
+BTARD's security model (paper §3, footnote 2) requires PUBLIC data: every
+peer samples minibatches from the full dataset via publicly known seeds
+xi_i^t, so validators can recompute anyone's gradients bit-exactly. Here the
+"dataset" is a deterministic synthetic generator:
+
+* token streams with learnable structure (noisy affine bigram process) for
+  LM training — loss demonstrably decreases;
+* gaussian-mixture classification batches for the §4.1-style controlled
+  Byzantine experiments;
+* frame/patch embedding stubs for the audio/VLM modality frontends.
+
+``peer_seed(global_seed, step, peer)`` is the paper's xi_i^t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def peer_seed(global_seed: int, step: int, peer: int) -> int:
+    """xi_i^t — publicly derivable, collision-free peer/step seed."""
+    return (global_seed * 1_000_003 + step * 4099 + peer) % (2**31 - 1)
+
+
+class TokenPipeline:
+    """Synthetic LM stream: x_{t+1} = (a*x_t + c) mod V with prob (1-noise),
+    else uniform. A model that learns the affine map drops well below
+    uniform cross-entropy."""
+
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
+                 a: int = 5, c: int = 7, noise: float = 0.2, global_seed: int = 0):
+        self.V = vocab_size
+        self.S = seq_len
+        self.B = batch_size
+        self.a, self.c, self.noise = a, c, noise
+        self.global_seed = global_seed
+
+    def _gen(self, key, batch):
+        k0, k1, k2 = jax.random.split(key, 3)
+        x0 = jax.random.randint(k0, (batch,), 0, self.V)
+        noise_mask = jax.random.bernoulli(k1, self.noise, (batch, self.S))
+        rand_tok = jax.random.randint(k2, (batch, self.S), 0, self.V)
+
+        def step(x, inputs):
+            nz, rt = inputs
+            nxt = jnp.where(nz, rt, (self.a * x + self.c) % self.V)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            step, x0, (noise_mask.T, rand_tok.T)
+        )
+        return jnp.concatenate([x0[:, None], toks.T], axis=1)  # (B, S+1)
+
+    def batch(self, step: int, peer: int = 0, *, batch_size=None, extras=None):
+        """Deterministic batch for (step, peer). extras: dict of
+        (name -> (shape_tail, dtype)) modality stubs to attach."""
+        b = batch_size or self.B
+        key = jax.random.key(peer_seed(self.global_seed, step, peer))
+        out = {"tokens": self._gen(key, b).astype(jnp.int32)}
+        if extras:
+            for name, (tail, dt) in extras.items():
+                out[name] = (
+                    jax.random.normal(jax.random.fold_in(key, hash(name) % 997), (b,) + tail) * 0.02
+                ).astype(dt)
+        return out
+
+
+def classification_batch(seed: int, batch: int, dim: int, n_classes: int,
+                         flip_labels: bool = False, margin: float = 2.0):
+    """Gaussian mixture with fixed class means (deterministic in seed).
+    flip_labels implements the paper's LABEL FLIPPING attack (l -> K-1-l)."""
+    means_key = jax.random.key(12345)  # fixed task definition
+    means = jax.random.normal(means_key, (n_classes, dim)) * margin
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    y = jax.random.randint(k1, (batch,), 0, n_classes)
+    x = means[y] + jax.random.normal(k2, (batch, dim))
+    if flip_labels:
+        y = n_classes - 1 - y
+    return {"x": x, "y": y}

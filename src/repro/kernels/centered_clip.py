@@ -1,0 +1,265 @@
+"""Pallas TPU kernels for BTARD's aggregation hot spots.
+
+The CenteredClip fixed point is a bandwidth-bound reduction over the stacked
+peer partitions (n_peers x part). The naive jnp version materializes
+``diff``, ``norms`` and the weighted sum as separate HBM temporaries every
+iteration (~4 passes); these kernels keep the working tile resident in VMEM
+and stream x once per phase:
+
+* ``centered_clip_kernel`` — grid (n_iters, 2, n_blocks); phase 0 accumulates
+  per-peer squared norms into a VMEM scratch, phase 1 converts them to clip
+  weights and updates v in place (input/output aliased). 2 HBM passes of x
+  per iteration, zero temporaries.
+
+* ``verify_tables_kernel`` — ONE pass of x producing both Verification-1/2
+  tables: per-peer <z, x_i - v> and ||x_i - v|| accumulate together, the clip
+  weight is applied in the epilogue on the last block.
+
+Block geometry: peers stay un-tiled (n <= ~64 on the peer axis), the
+partition dim is tiled by ``block`` (lane-aligned multiples of 128). Inputs
+are zero-padded to a block multiple — zero columns where x == v == 0
+contribute nothing to norms, dots, or updates, so padding is exact.
+Validated on CPU with interpret=True against kernels/ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 512
+
+
+# ===========================================================================
+# CenteredClip fixed-point kernel
+# ===========================================================================
+def _cc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
+    """Grid (n_iters, 2, n_blocks).
+
+    taus: (n_iters, 1) SMEM-ish small input; w: (n, 1) peer weights;
+    xs: (n, blk) tile; v/out: (1, blk) aliased; scratch sq/cw: (n, 1) f32.
+    """
+    it = pl.program_id(0)
+    phase = pl.program_id(1)
+    blk = pl.program_id(2)
+
+    @pl.when(phase == 0)
+    def _phase_norms():
+        @pl.when(it == 0)
+        def _copy_in():
+            # v lives in out_ref from here on (aliasing the input ref is not
+            # readable-after-write in interpret mode)
+            out_ref[...] = v_ref[...]
+
+        @pl.when(blk == 0)
+        def _reset():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        diff = xs_ref[...].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(phase == 1)
+    def _phase_update():
+        @pl.when(blk == 0)
+        def _weights():
+            tau = taus_ref[0, 0]
+            norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
+            cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+            cw = jnp.where(jnp.isinf(tau), 1.0, cw)
+            cw_ref[...] = cw * w_ref[...].astype(jnp.float32)
+
+        wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
+        diff = xs_ref[...].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
+        out_ref[...] = out_ref[...] + upd
+
+
+def centered_clip_pallas(
+    xs, taus, weights=None, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """CenteredClip via the Pallas kernel. xs: (n, d) -> v: (d,) f32."""
+    n, d = xs.shape
+    n_iters = int(taus.shape[0])
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        xs = jnp.pad(xs, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    taus2 = taus.reshape(n_iters, 1).astype(jnp.float32)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    v0 = jnp.zeros((1, dp), jnp.float32)
+
+    out = pl.pallas_call(
+        _cc_kernel,
+        grid=(n_iters, 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, p, b: (i, 0)),
+            pl.BlockSpec((n, 1), lambda i, p, b: (0, 0)),
+            pl.BlockSpec((n, blk), lambda i, p, b: (0, b)),
+            pl.BlockSpec((1, blk), lambda i, p, b: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda i, p, b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(taus2, w2, xs, v0)
+    return out[0, :d]
+
+
+# ===========================================================================
+# Batched multi-partition CenteredClip (the full ButterflyClip aggregation
+# in ONE pallas_call: grid (n_parts, n_iters, 2, n_blocks); the partition
+# index is outermost so the per-peer scratch naturally re-initializes at
+# each partition's first grid step)
+# ===========================================================================
+def _bcc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
+    it = pl.program_id(1)
+    phase = pl.program_id(2)
+    blk = pl.program_id(3)
+
+    @pl.when(phase == 0)
+    def _phase_norms():
+        @pl.when(it == 0)
+        def _copy_in():
+            out_ref[...] = v_ref[...]
+
+        @pl.when(blk == 0)
+        def _reset():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        diff = xs_ref[0].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(phase == 1)
+    def _phase_update():
+        @pl.when(blk == 0)
+        def _weights():
+            tau = taus_ref[0, 0]
+            norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
+            cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+            cw = jnp.where(jnp.isinf(tau), 1.0, cw)
+            cw_ref[...] = cw * w_ref[...].astype(jnp.float32)
+
+        wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
+        diff = xs_ref[0].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
+        out_ref[...] = out_ref[...] + upd
+
+
+def butterfly_clip_pallas(
+    parts, taus, weights=None, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """All-partition CenteredClip: parts (n_parts, n_peers, part) -> the
+    robust aggregate (n_parts, part) f32 — i.e. ButterflyClip's aggregation
+    stage as a single fused kernel."""
+    n_parts, n, d = parts.shape
+    n_iters = int(taus.shape[0])
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    taus2 = taus.reshape(n_iters, 1).astype(jnp.float32)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    v0 = jnp.zeros((n_parts, dp), jnp.float32)
+
+    out = pl.pallas_call(
+        _bcc_kernel,
+        grid=(n_parts, n_iters, 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda p, i, ph, b: (i, 0)),
+            pl.BlockSpec((n, 1), lambda p, i, ph, b: (0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, i, ph, b: (p, 0, b)),
+            pl.BlockSpec((1, blk), lambda p, i, ph, b: (p, b)),
+        ],
+        out_specs=pl.BlockSpec((1, blk), lambda p, i, ph, b: (p, b)),
+        out_shape=jax.ShapeDtypeStruct((n_parts, dp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(taus2, w2, parts, v0)
+    return out[:, :d]
+
+
+# ===========================================================================
+# Fused verification-tables kernel (single HBM pass)
+# ===========================================================================
+def _vt_kernel(tau_ref, xs_ref, v_ref, z_ref, s_ref, norm_ref, dot_ref, sq_ref):
+    """Grid (n_blocks,). Accumulate per-peer dot & sqnorm; epilogue on last."""
+    blk = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(blk == 0)
+    def _reset():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    diff = xs_ref[...].astype(jnp.float32) - v_ref[...].astype(jnp.float32)
+    zb = z_ref[...].astype(jnp.float32)
+    dot_ref[...] += jnp.sum(diff * zb, axis=1, keepdims=True)
+    sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(blk == nb - 1)
+    def _epilogue():
+        tau = tau_ref[0, 0]
+        norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
+        cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        s_ref[...] = cw * dot_ref[...]
+        norm_ref[...] = norms
+
+
+def verify_tables_pallas(
+    xs, v, z, tau, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """Fused s_i = <z, clip(x_i - v)>, norm_i = ||x_i - v|| in one pass.
+
+    xs: (n, d); v, z: (d,). Returns (s (n,), norms (n,)).
+    """
+    n, d = xs.shape
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        xs = jnp.pad(xs, ((0, 0), (0, dp - d)))
+        v = jnp.pad(v, (0, dp - d))
+        z = jnp.pad(z, (0, dp - d))
+    n_blocks = dp // blk
+
+    tau2 = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    s, norms = pl.pallas_call(
+        _vt_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+            pl.BlockSpec((n, blk), lambda b: (0, b)),
+            pl.BlockSpec((1, blk), lambda b: (0, b)),
+            pl.BlockSpec((1, blk), lambda b: (0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda b: (0, 0)),
+            pl.BlockSpec((n, 1), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tau2, xs, v.reshape(1, dp), z.reshape(1, dp))
+    return s[:, 0], norms[:, 0]

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True; on a real TPU
+set ``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to lower natively.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import centered_clip as _k
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def centered_clip_op(xs, tau, weights=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed CenteredClip: xs (n, d), scalar tau -> (d,) f32."""
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    return _k.centered_clip_pallas(
+        xs, taus, weights, block=block, interpret=_INTERPRET
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def verify_tables_op(xs, v, z, tau, *, block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed fused verification tables."""
+    return _k.verify_tables_pallas(xs, v, z, tau, block=block, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def butterfly_clip_op(parts, tau, weights=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed all-partition ButterflyClip aggregation:
+    parts (n_parts, n_peers, part) -> (n_parts, part)."""
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    return _k.butterfly_clip_pallas(parts, taus, weights, block=block, interpret=_INTERPRET)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def centered_clip_ref(xs, taus, weights=None, v0=None):
+    """Reference CenteredClip.
+
+    xs: (n, d); taus: (n_iters,) per-iteration clip radii; weights: (n,).
+    Returns v: (d,) f32.
+    """
+    xs = xs.astype(jnp.float32)
+    n, d = xs.shape
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wsum = jnp.maximum(w.sum(), 1e-30)
+    v = jnp.zeros((d,), jnp.float32) if v0 is None else v0.astype(jnp.float32)
+    for tau in taus:
+        diff = xs - v[None, :]
+        norms = jnp.linalg.norm(diff, axis=1)
+        cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        cw = jnp.where(jnp.isinf(tau), 1.0, cw) * w
+        v = v + (cw[:, None] * diff).sum(0) / wsum
+    return v
+
+
+def verify_tables_ref(xs, v, z, tau):
+    """Reference fused verification scalars.
+
+    s_i = min(1, tau/||x_i - v||) * <z, x_i - v>;  norm_i = ||x_i - v||.
+    xs: (n, d); v, z: (d,). Returns (s (n,), norms (n,)) f32.
+    """
+    xs = xs.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    diff = xs - v[None, :]
+    norms = jnp.linalg.norm(diff, axis=1)
+    dots = diff @ z
+    cw = jnp.minimum(1.0, jnp.float32(tau) / jnp.maximum(norms, 1e-30))
+    return cw * dots, norms

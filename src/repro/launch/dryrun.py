@@ -1,0 +1,348 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers AND compiles for the production meshes, and extract the roofline raw
+terms (FLOPs / bytes / collective bytes / per-device memory).
+
+The 512 host devices above exist ONLY here (smoke tests and benches must see
+one device), which is why this sets XLA_FLAGS before any other import.
+
+cost_analysis() counts a lax.scan body ONCE (verified empirically), so this
+module also lowers a single-macro-block PROBE per model and reports
+    corrected = full + (trip_count - 1) * probe
+for flops / bytes / collective bytes. The only scans in the model are the
+macro-block layer scan and (whisper) the encoder scan — by design.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # every applicable pair
+  ... [--step baseline|btard] [--out results/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch import input_specs as ispecs
+from repro.launch.steps import (
+    make_baseline_train_step,
+    make_btard_train_step,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.models import Model
+from repro.optim import sgd
+from repro.sharding import param_specs, set_mesh
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum of result bytes per collective kind (per-device program)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        ty, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(ty)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def analyze_compiled(step_fn, args, tag=""):
+    t0 = time.time()
+    lowered = step_fn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    rec = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+    }
+    for attr in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            rec[attr] = int(v)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Single-macro-block probes (scan-body cost correction)
+# ---------------------------------------------------------------------------
+def make_pattern_probe(model: Model, mesh, shape, kind):
+    """Jit one macro-block (fwd for serve kinds; remat fwd+bwd for train)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import transformer as tfm
+
+    cfg = model.cfg
+    if not (cfg.pattern and cfg.n_repeats > 1):
+        return None, None, 0
+    set_mesh(mesh)
+    params_abs = model.abstract_params()
+    if cfg.share_pattern_params:
+        pat_abs = params_abs["pattern"]
+        strip = lambda s: s
+    else:
+        pat_abs = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), params_abs["pattern"]
+        )
+        strip = lambda s: P(*list(s)[1:]) if len(s) else s
+
+    pspecs_all = ispecs.resolve_spec_names(param_specs(params_abs), mesh)
+    pat_specs = jax.tree.map(
+        strip, pspecs_all["pattern"], is_leaf=lambda x: isinstance(x, P)
+    )
+    pat_specs = ispecs.sanitize_specs(pat_specs, pat_abs, mesh)
+
+    B = shape.global_batch
+    S = 1 if kind == "decode" else shape.seq_len
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    from repro.sharding.specs import activation_spec
+
+    x_spec = activation_spec("batch", None, None)
+
+    mem_abs = None
+    if cfg.encoder_len and any(
+        s.cross or s.mixer == "attn_cross" for s in cfg.pattern
+    ) and kind != "decode":
+        mem_abs = jax.ShapeDtypeStruct((B, cfg.encoder_len, cfg.d_model), x_abs.dtype)
+
+    cache_abs = None
+    cache_specs_t = None
+    if kind in ("prefill", "decode"):
+        one = {
+            f"l{i}": tfm.block_cache_shapes(cfg, s, B, shape.seq_len)
+            for i, s in enumerate(cfg.pattern)
+        }
+        cache_abs = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l[0], l[1]),
+            one,
+            is_leaf=lambda l: isinstance(l, tuple) and len(l) == 2 and isinstance(l[0], tuple),
+        )
+        cs_full = ispecs.resolve_spec_names(ispecs.cache_specs(model, shape, mesh), mesh)
+        # rebuild per-block specs (strip the stack dim from pattern specs)
+        cs_pat = cs_full.get("pattern") if isinstance(cs_full, dict) else None
+        if cs_pat is not None:
+            cache_specs_t = jax.tree.map(
+                lambda s: P(*list(s)[1:]) if len(s) else s,
+                cs_pat,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            cache_specs_t = ispecs.sanitize_specs(cache_specs_t, cache_abs, mesh)
+
+    pos_abs = (
+        jax.ShapeDtypeStruct((B,), jnp.int32)
+        if kind == "decode"
+        else jax.ShapeDtypeStruct((S,), jnp.int32)
+    )
+
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[kind]
+
+    def block_fwd(pt, x, pos, memory, cache_t):
+        out, nc, aux = tfm._macro_apply(
+            pt, cfg, x, pos=pos, memory=memory, cache_t=cache_t, mode=mode, remat=False
+        )
+        return out, nc
+
+    if kind == "train":
+
+        def probe(pt, x, pos, memory):
+            f = jax.checkpoint(
+                lambda p_, x_: block_fwd(p_, x_, pos, memory, None)[0]
+            )
+
+            def loss(p_, x_):
+                return jnp.sum(f(p_, x_).astype(jnp.float32))
+
+            g = jax.grad(loss, argnums=(0, 1))(pt, x)
+            return g
+
+        in_sh = (
+            _ns(mesh, pat_specs),
+            NamedSharding(mesh, x_spec),
+            None,
+            None if mem_abs is None else NamedSharding(mesh, P()),
+        )
+        args = (pat_abs, x_abs, pos_abs, mem_abs)
+        fn = jax.jit(probe, in_shardings=in_sh)
+    else:
+
+        def probe(pt, x, pos, memory, cache_t):
+            return block_fwd(pt, x, pos, memory, cache_t)
+
+        in_sh = (
+            _ns(mesh, pat_specs),
+            NamedSharding(mesh, x_spec),
+            None,
+            None if mem_abs is None else NamedSharding(mesh, P()),
+            None if cache_specs_t is None else _ns(mesh, cache_specs_t),
+        )
+        args = (pat_abs, x_abs, pos_abs, mem_abs, cache_abs)
+        fn = jax.jit(probe, in_shardings=in_sh)
+
+    return fn, args, model.cfg.n_repeats
+
+
+def _ns(mesh, spec_tree):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+# ---------------------------------------------------------------------------
+def run_pair(arch, shape_name, multi_pod=False, step_kind=None, out_dir=None,
+             probe=True, seq_parallel=False):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not shape_applicable(cfg, shape):
+        print(f"SKIP {arch} x {shape_name}: long_500k needs sub-quadratic attention")
+        return None
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    from repro.sharding.specs import set_seq_parallel
+
+    set_seq_parallel(seq_parallel)
+    opt = sgd(1e-2, momentum=0.9)
+
+    kind = shape.kind
+    if step_kind is None:
+        step_kind = "baseline" if kind == "train" else kind
+
+    base_kind = step_kind.replace("-seqp", "")
+    if base_kind == "baseline":
+        fn, args = make_baseline_train_step(model, opt, mesh, shape)
+    elif base_kind == "btard":
+        fn, args = make_btard_train_step(model, opt, mesh, shape, clip_iters=20)
+    elif base_kind == "prefill":
+        fn, args = make_prefill_step(model, mesh, shape)
+    elif base_kind == "decode":
+        fn, args = make_decode_step(model, mesh, shape)
+    else:
+        raise ValueError(step_kind)
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if seq_parallel:
+        step_kind = step_kind + "-seqp"
+    tag = f"{arch} x {shape_name} x {mesh_name} [{step_kind}]"
+    print(f"== {tag}", flush=True)
+    rec = analyze_compiled(fn, args, tag)
+    rec.update(
+        arch=arch, shape=shape_name, mesh=mesh_name, step=step_kind,
+        n_devices=int(np.prod(list(mesh.shape.values()))),
+        param_count=model.param_count(),
+        active_param_count=float(model.active_param_count()),
+    )
+
+    if probe and kind == "train" or probe and kind in ("prefill", "decode"):
+        try:
+            pfn, pargs, trips = make_pattern_probe(model, mesh, shape, kind)
+            if pfn is not None:
+                prec = analyze_compiled(pfn, pargs)
+                rec["probe"] = {
+                    "flops": prec["flops"],
+                    "bytes": prec["bytes"],
+                    "collective_bytes": prec["collective_bytes"],
+                    "trips": trips,
+                }
+                rec["flops_corrected"] = rec["flops"] + (trips - 1) * prec["flops"]
+                rec["bytes_corrected"] = rec["bytes"] + (trips - 1) * prec["bytes"]
+                rec["collective_bytes_corrected"] = rec["collective_bytes"]["total"] + (
+                    trips - 1
+                ) * prec["collective_bytes"]["total"]
+        except Exception as e:  # probe failures must not fail the dry-run
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    print(
+        "   flops={flops:.3e} bytes={bytes:.3e} coll={c:.3e} "
+        "args={a:.1f}GB temp={t:.1f}GB compile={s}s".format(
+            flops=rec.get("flops_corrected", rec["flops"]),
+            bytes=rec.get("bytes_corrected", rec["bytes"]),
+            c=rec.get("collective_bytes_corrected", rec["collective_bytes"]["total"]),
+            a=rec.get("argument_size_in_bytes", 0) / 1e9,
+            t=rec.get("temp_size_in_bytes", 0) / 1e9,
+            s=rec["compile_s"],
+        ),
+        flush=True,
+    )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}__{step_kind}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--step", default=None, choices=[None, "baseline", "btard", "prefill", "decode"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch in list_archs():
+            for shape_name in INPUT_SHAPES:
+                run_pair(arch, shape_name, args.multi_pod, args.step, args.out,
+                         probe=not args.no_probe, seq_parallel=args.seq_parallel)
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    rec = run_pair(args.arch, args.shape, args.multi_pod, args.step, args.out,
+                   probe=not args.no_probe, seq_parallel=args.seq_parallel)
+    if rec is None:
+        sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch x shape) pair.
+
+Nothing here allocates: the dry-run lowers against these abstract values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models import Model
+from repro.sharding import batch_axes, param_specs
+from repro.sharding.specs import activation_spec
+
+
+def abstract_batch(cfg, shape, kind=None):
+    """Abstract model inputs for an InputShape."""
+    kind = kind or shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    if kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    elif kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode
+        batch = {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    if cfg.encoder_len and kind in ("train", "prefill"):
+        batch["memory_raw"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_len, cfg.encoder_dim), jnp.bfloat16
+        )
+    return batch
+
+
+def batch_specs(cfg, shape, kind=None):
+    kind = kind or shape.kind
+    b = activation_spec("batch")[0]
+    if kind == "train":
+        specs = {"tokens": P(b, None)}
+    elif kind == "prefill":
+        specs = {"tokens": P(b, None)}
+    else:
+        specs = {"token": P(b), "pos": P(b)}
+    if cfg.encoder_len and kind in ("train", "prefill"):
+        specs["memory_raw"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(model: Model, shape, mesh):
+    """PartitionSpecs for the KV/SSM/RG-LRU cache tree.
+
+    decode_32k: batch >= data => shard batch; long_500k: batch=1 => shard the
+    cache sequence dim over 'data' (distributed decode attention — XLA GSPMD
+    turns the softmax over the sharded seq dim into partial reductions +
+    all-reduce, flash-decode style).
+    """
+    n_batch_shards = 1
+    for a in batch_axes():
+        n_batch_shards *= mesh.shape[a]
+    shard_seq = shape.global_batch < n_batch_shards
+    b = activation_spec("batch")[0] if not shard_seq else None
+    seq = "data" if shard_seq else None
+
+    n_model = mesh.shape.get("model", 1)
+    cfg = model.cfg
+    # kv heads shard over 'model' when divisible; else shard head_dim
+    kv_ok = cfg.n_kv_heads and cfg.n_kv_heads % n_model == 0
+    kv_spec = (("model", None) if kv_ok else (None, "model"))
+
+    def leaf_spec(path, leaf):
+        name = path[-1]
+        nd = len(leaf[0]) if isinstance(leaf, tuple) else leaf.ndim
+        stacked = "pattern" in path[:-1]
+        if name in ("k", "v", "mem_k", "mem_v"):
+            spec = (b, seq if name in ("k", "v") else None) + kv_spec
+        elif name == "c_kv":
+            spec = (b, seq, "model")  # MLA latent rank shards over model
+        elif name == "k_rope":
+            spec = (b, seq, None)
+        elif name == "state":
+            spec = (b, "model", None, None)
+        elif name == "conv":
+            spec = (b, None, "model")
+        elif name == "h":
+            spec = (b, "model")
+        else:
+            spec = (None,) * nd
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)) and not (
+            len(tree) == 2 and isinstance(tree[0], tuple)
+        ):
+            return [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
+        return leaf_spec(path, tree)
+
+    return walk(shapes, ())
+
+
+def abstract_cache(model: Model, shape):
+    return model.abstract_cache(shape.global_batch, shape.seq_len)
+
+
+def sanitize_specs(spec_tree, abs_tree, mesh):
+    """Drop sharding on dims not divisible by the mesh axis size (e.g. MQA
+    kv=1 heads cannot shard over 'model')."""
+
+    def fix(spec, leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else leaf[0]
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for dim, entry in zip(shape, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            out.append(entry if dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(
+        fix, spec_tree, abs_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def resolve_spec_names(spec_tree, mesh):
+    """Drop spec axis names not present in the mesh (e.g. 'pod' single-pod)."""
+    axes = set(mesh.axis_names)
+
+    def fix(spec):
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, (tuple, list)):
+                kept = tuple(a for a in entry if a in axes)
+                out.append(kept if kept else None)
+            else:
+                out.append(entry if entry in axes else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,17 @@
+"""Production mesh builders (functions — importing never touches jax device
+state; jax locks the device count on first backend init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (host platform device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

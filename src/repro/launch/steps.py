@@ -1,0 +1,468 @@
+"""Distributed step builders for the production mesh.
+
+Three step kinds per architecture:
+
+* baseline train   — auto-GSPMD FSDP('data') x TP('model') AR-SGD (the
+                     paper's All-Reduce comparison; also the 33-pair roofline
+                     baseline).
+* BTARD train      — the paper's technique as a first-class distributed step:
+                     stage 1 computes per-peer gradients (shard_map manual
+                     over the peer axes = pod x data, auto over 'model');
+                     stage 2 is the butterfly robust all-reduce (fully-manual
+                     shard_map): all_to_all gradient partitions, CenteredClip
+                     per partition (optionally the Pallas kernel), the
+                     O(n^2)-scalar verification tables, all_gather back.
+* serve (prefill / decode) — auto-GSPMD with KV-cache shardings
+                     (sequence-sharded for long_500k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.centered_clip import centered_clip, clip_residuals
+from repro.launch import input_specs as ispecs
+from repro.models import Model
+from repro.optim.optimizers import apply_updates
+from repro.sharding import param_specs, set_mesh
+from repro.sharding.specs import activation_spec
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def opt_state_specs(opt_state_abs, pspecs):
+    """Optimizer state mirrors the param tree per moment buffer."""
+
+    def per_bucket(bucket):
+        return pspecs
+
+    return {k: pspecs for k in opt_state_abs} if isinstance(opt_state_abs, dict) else opt_state_abs
+
+
+# ===========================================================================
+# Baseline AR-SGD train step (auto GSPMD, FSDP x TP)
+# ===========================================================================
+def make_baseline_train_step(model: Model, optimizer, mesh, shape):
+    set_mesh(mesh)
+    params_abs = model.abstract_params()
+    pspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(param_specs(params_abs), mesh), params_abs, mesh
+    )
+    bspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.batch_specs(model.cfg, shape, "train"), mesh),
+        ispecs.abstract_batch(model.cfg, shape, "train"),
+        mesh,
+    )
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    ospecs = {k: pspecs for k in opt_abs}
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            _named(mesh, bspecs),
+            None,
+        ),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+    )
+    abstract_args = (
+        params_abs,
+        opt_abs,
+        ispecs.abstract_batch(model.cfg, shape, "train"),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return jitted, abstract_args
+
+
+# ===========================================================================
+# BTARD butterfly stage (fully-manual shard_map over every mesh axis)
+# ===========================================================================
+def _flatten_local(leaves, dtype=jnp.float32):
+    return jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+
+
+def _unflatten_local(vec, leaves):
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape))
+        out.append(vec[off : off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return out
+
+
+def butterfly_stage(
+    g_vec, peer_axes, n_peers, tau, clip_iters, weights, seed, use_pallas=False,
+    delta_max=None,
+):
+    """Fully-manual-region butterfly robust all-reduce of one local gradient
+    vector. Returns (aggregated vector, verification dict).
+
+    The local (model-shard) gradient vector is split into n_peers partitions;
+    partition j is robustly aggregated by peer j (all_to_all), exactly
+    Alg. 2 with partitions laid out over the TPU peer axis.
+    """
+    d = g_vec.shape[0]
+    part = -(-d // n_peers)
+    pad = part * n_peers - d
+    if pad:
+        g_vec = jnp.concatenate([g_vec, jnp.zeros((pad,), g_vec.dtype)])
+    x = g_vec.reshape(n_peers, part)
+    # each peer receives everyone's copy of ITS partition. The barrier pins
+    # the transport dtype: without it XLA hoists the downstream f32 upcast
+    # ahead of the collective, silently undoing bf16 transport (§Perf H3).
+    recv = jax.lax.all_to_all(x, peer_axes, split_axis=0, concat_axis=0, tiled=True)
+    recv = jax.lax.optimization_barrier(recv)
+
+    if use_pallas:
+        from repro.kernels.centered_clip import centered_clip_pallas
+
+        taus = jnp.full((clip_iters,), tau, jnp.float32)
+        agg = centered_clip_pallas(recv, taus, weights)
+    else:
+        agg = centered_clip(recv, tau=tau, n_iters=clip_iters, weights=weights)
+    agg = agg.astype(jnp.float32)
+
+    # --- verification tables (Alg. 6): z derived from the shared MPRNG seed,
+    # folded by partition owner index; commitments are host-side (protocol).
+    my_idx = jax.lax.axis_index(peer_axes)
+    z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), my_idx), (part,))
+    z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
+    deltas = clip_residuals(recv.astype(jnp.float32), agg, tau)
+    s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
+    norms_local = jnp.linalg.norm(recv.astype(jnp.float32) - agg[None], axis=1)
+
+    checksum = jnp.abs((s_local * weights).sum())
+    votes = ((norms_local > delta_max) * weights).sum() if delta_max is not None else jnp.zeros(())
+    # broadcast the scalar tables (O(n^2) data total — size-independent)
+    s_table = jax.lax.all_gather(s_local, peer_axes)  # (n_parts, n_peers)
+    norm_table = jax.lax.all_gather(norms_local, peer_axes)
+
+    full = jax.lax.all_gather(
+        agg.astype(g_vec.dtype), peer_axes, tiled=True
+    ).astype(jnp.float32)  # (n_peers*part,) — gather in the transport dtype
+    if pad:
+        full = full[:d]
+    # checksum/votes are per-partition (expand-dims -> peer-axis out spec);
+    # the gathered s/norm tables are the SAME on every peer (the broadcast)
+    # so they leave the region as replicated (n_parts, n_peers) arrays.
+    verif = {
+        "checksum": checksum[None],
+        "votes": jnp.asarray(votes)[None],
+        "s_table": s_table,
+        "norm_table": norm_table,
+    }
+    return full, verif
+
+
+def device_attack(grads_vec, byz_mask, peer_axes, kind, key, lam=100.0):
+    """Device-side Byzantine simulation on the local gradient vector."""
+    my_idx = jax.lax.axis_index(peer_axes)
+    is_byz = byz_mask[my_idx] > 0
+    if kind == "none":
+        return grads_vec
+    if kind == "sign_flip":
+        return jnp.where(is_byz, -lam * grads_vec, grads_vec)
+    if kind == "random_direction":
+        v = jax.random.normal(key, grads_vec.shape, grads_vec.dtype)
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+        scale = lam * jnp.linalg.norm(grads_vec)
+        return jnp.where(is_byz, scale * v, grads_vec)
+    if kind == "ipm":
+        n_honest = jnp.maximum((1.0 - byz_mask).sum(), 1.0)
+        honest_sum = jax.lax.psum(
+            jnp.where(is_byz, 0.0, 1.0) * grads_vec, peer_axes
+        )
+        mu = honest_sum / n_honest
+        return jnp.where(is_byz, -0.6 * mu, grads_vec)
+    raise ValueError(kind)
+
+
+# ===========================================================================
+# BTARD distributed train step
+# ===========================================================================
+def make_btard_train_step(
+    model: Model,
+    optimizer,
+    mesh,
+    shape,
+    tau: float = 1.0,
+    clip_iters: int = 20,
+    attack: str = "none",
+    use_pallas: bool = False,
+    delta_max: float | None = 1e9,
+    zero1: bool = True,
+    transport_dtype=jnp.float32,
+):
+    """Returns (jitted step, abstract args).
+
+    step(params, opt_state, batch, step_idx, seed, byz_mask, weights)
+      -> (params, opt_state, metrics)
+    Params are replicated over the peer axes (each peer = full replica,
+    model-sharded over 'model'); optimizer state is ZeRO-1-sharded over
+    'data' when zero1 (the butterfly partition owner updates its shard —
+    exactly Alg. 7's per-partition ownership).
+    """
+    set_mesh(mesh)
+    cfg = model.cfg
+    peer_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_peers = int(np.prod([mesh.shape[a] for a in peer_axes]))
+
+    params_abs = model.abstract_params()
+    # replicated over peers: param specs WITHOUT the fsdp axis
+    pspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(param_specs(params_abs), mesh), params_abs, mesh
+    )
+    pspecs = jax.tree.map(
+        lambda s: P(*[_drop_data(e) for e in s]), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    bspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.batch_specs(cfg, shape, "train"), mesh),
+        ispecs.abstract_batch(cfg, shape, "train"),
+        mesh,
+    )
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    ospecs = {k: pspecs for k in opt_abs}
+
+    # ---- stage 1: per-peer grads (manual peers, auto model) ----------------
+    def peer_grads(params, batch):
+        from repro.sharding.specs import set_manual_axes
+
+        set_manual_axes(peer_axes)  # trace-time: shard() skips peer axes
+        try:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True
+            )(params, batch)
+        finally:
+            set_manual_axes(())
+        return loss[None], jax.tree.map(lambda g: g[None], grads)
+
+    stage1 = jax.shard_map(
+        peer_grads,
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda s: P(), pspecs, is_leaf=_is_p), _peer_lead(bspecs, peer_axes)),
+        out_specs=(P(peer_axes), jax.tree.map(lambda s: P(peer_axes), pspecs, is_leaf=_is_p)),
+        axis_names=set(peer_axes),
+        check_vma=False,
+    )
+
+    # ---- stage 2: butterfly robust all-reduce (fully manual) ---------------
+    def butterfly_all(grads, seed, byz_mask, weights, key):
+        leaves = jax.tree.leaves(grads)
+        # beyond-paper: gradients can travel the butterfly in bf16 — halves
+        # the all_to_all + all_gather volume; CenteredClip still iterates in
+        # f32 (EXPERIMENTS.md §Perf H3)
+        vec = _flatten_local([l[0] for l in leaves], transport_dtype)
+        vec = device_attack(vec, byz_mask, peer_axes, attack, key)
+        agg_vec, verif = butterfly_stage(
+            vec, peer_axes, n_peers, tau, clip_iters, weights, seed,
+            use_pallas=use_pallas, delta_max=delta_max,
+        )
+        agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
+        agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
+        return agg, verif
+
+    manual_pspecs = jax.tree.map(
+        lambda s: P(peer_axes, *s), pspecs, is_leaf=_is_p
+    )
+    stage2 = jax.shard_map(
+        butterfly_all,
+        mesh=mesh,
+        in_specs=(manual_pspecs, P(), P(), P(), P()),
+        out_specs=(
+            jax.tree.map(lambda s: s, pspecs, is_leaf=_is_p),
+            {
+                "checksum": P(peer_axes),
+                "votes": P(peer_axes),
+                "s_table": P(None, None),
+                "norm_table": P(None, None),
+            },
+        ),
+        axis_names=set(mesh.axis_names),
+        check_vma=False,
+    )
+
+    def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
+        loss, grads = stage1(params, batch)
+        key = jax.random.fold_in(jax.random.key(0), step)
+        agg, verif = stage2(grads, seed, byz_mask, weights, key)
+        updates, opt_state = optimizer.update(agg, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": loss.mean(),
+            "checksum_max": verif["checksum"].max(),
+            "votes_max": verif["votes"].max(),
+        }
+        return params, opt_state, metrics, verif
+
+    if zero1:
+        n_data = mesh.shape.get("data", 1)
+        ospecs = {
+            k: jax.tree.map(
+                lambda s, l: _with_data(s, l.shape, n_data),
+                pspecs,
+                opt_abs[k],
+                is_leaf=_is_p,
+            )
+            for k in opt_abs
+        }
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            _named(mesh, bspecs),
+            None,
+            None,
+            None,
+            None,
+        ),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None, None),
+    )
+    abstract_args = (
+        params_abs,
+        opt_abs,
+        ispecs.abstract_batch(cfg, shape, "train"),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((n_peers,), jnp.float32),
+        jax.ShapeDtypeStruct((n_peers,), jnp.float32),
+    )
+    return jitted, abstract_args
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def _drop_data(entry):
+    if entry == "data" or entry == "pod":
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a not in ("data", "pod"))
+        return kept or None
+    return entry
+
+
+def _with_data(spec, shape, n_data):
+    """ZeRO-1: shard the first shardable (unsharded & divisible) dim of the
+    moment buffers on 'data' — the butterfly partition owner updates it."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % n_data == 0:
+            entries[i] = "data"
+            return P(*entries)
+    return P(*entries)
+
+
+def _peer_lead(bspecs, peer_axes):
+    def fix(s):
+        return P(peer_axes, *list(s)[1:])
+
+    return jax.tree.map(fix, bspecs, is_leaf=_is_p)
+
+
+# ===========================================================================
+# Serving steps
+# ===========================================================================
+def make_decode_step(model: Model, mesh, shape, fsdp_params: bool | None = None):
+    set_mesh(mesh)
+    params_abs = model.abstract_params()
+    if fsdp_params is None:
+        per_chip = model.param_count() * 2 / mesh.shape["model"]
+        fsdp_params = per_chip > 10e9  # replicate unless it would not fit
+    pspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(param_specs(params_abs), mesh), params_abs, mesh
+    )
+    if not fsdp_params:
+        pspecs = jax.tree.map(
+            lambda s: P(*[_drop_data(e) for e in s]), pspecs, is_leaf=_is_p
+        )
+    cspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.cache_specs(model, shape, mesh), mesh),
+        ispecs.abstract_cache(model, shape),
+        mesh,
+    )
+    bspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.batch_specs(model.cfg, shape, "decode"), mesh),
+        ispecs.abstract_batch(model.cfg, shape, "decode"),
+        mesh,
+    )
+
+    def decode(params, cache, batch):
+        logits, new_cache = model.decode_step(params, batch, cache)
+        return logits, new_cache
+
+    jitted = jax.jit(
+        decode,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, cspecs),
+            _named(mesh, bspecs),
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+    )
+    abstract_args = (
+        params_abs,
+        ispecs.abstract_cache(model, shape),
+        ispecs.abstract_batch(model.cfg, shape, "decode"),
+    )
+    return jitted, abstract_args
+
+
+def make_prefill_step(model: Model, mesh, shape, fsdp_params: bool = True):
+    set_mesh(mesh)
+    params_abs = model.abstract_params()
+    pspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(param_specs(params_abs), mesh), params_abs, mesh
+    )
+    if not fsdp_params:
+        pspecs = jax.tree.map(
+            lambda s: P(*[_drop_data(e) for e in s]), pspecs, is_leaf=_is_p
+        )
+    cspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.cache_specs(model, shape, mesh), mesh),
+        ispecs.abstract_cache(model, shape),
+        mesh,
+    )
+    bspecs = ispecs.sanitize_specs(
+        ispecs.resolve_spec_names(ispecs.batch_specs(model.cfg, shape, "prefill"), mesh),
+        ispecs.abstract_batch(model.cfg, shape, "prefill"),
+        mesh,
+    )
+
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    jitted = jax.jit(
+        prefill,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, bspecs),
+            _named(mesh, cspecs),
+        ),
+        out_shardings=(None, _named(mesh, cspecs)),
+    )
+    abstract_args = (
+        params_abs,
+        ispecs.abstract_batch(model.cfg, shape, "prefill"),
+        ispecs.abstract_cache(model, shape),
+    )
+    return jitted, abstract_args

@@ -1,0 +1,100 @@
+"""RG-LRU recurrent mixer (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t/i_t input-dependent sigmoids.
+
+Training/prefill uses jax.lax.associative_scan over time (log-depth,
+cost-analysis-visible); decode carries (h, conv buffer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    causal_conv1d,
+    causal_conv1d_step,
+    cdtype,
+    conv1d_init,
+    dense_init,
+)
+from repro.sharding import shard
+
+RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg, spec=None):
+    dt = cdtype(cfg)
+    w = cfg.rglru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], cfg.d_model, w, dt),
+        "gate_w": dense_init(ks[1], cfg.d_model, w, dt),
+        "wa": dense_init(ks[2], w, w, dt),
+        "wx": dense_init(ks[3], w, w, dt),
+        # init so that a ~ Uniform-ish decay in (0.9, 0.999)
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.linspace(0.9, 0.999, w)) / RGLRU_C)),
+            jnp.float32,
+        ),
+        "out_proj": dense_init(ks[4], w, cfg.d_model, dt),
+    }
+    p.update(conv1d_init(ks[5], w, cfg.rglru_conv, dt))
+    return p
+
+
+def _gates(p, xc):
+    """xc: (..., w) conv output -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc, p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xc, p["wx"]).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * xc.astype(jnp.float32))
+    return log_a, b
+
+
+def rglru_apply(p, cfg, spec, x, *, pos=None, memory=None, cache=None, mode="train"):
+    B, S, _ = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_proj"])
+    xb = shard(xb, "batch", None, "model")
+    gate = jax.nn.silu(jnp.einsum("bsd,dw->bsw", x, p["gate_w"]).astype(jnp.float32))
+
+    new_cache = {} if cache is not None else None
+    if mode == "decode":
+        conv_buf, xc = causal_conv1d_step(p, cache["conv"], xb[:, 0])
+        new_cache["conv"] = conv_buf
+        log_a, b = _gates(p, xc)
+        h = cache["h"].astype(jnp.float32) * jnp.exp(log_a) + b  # (B, w)
+        new_cache["h"] = h.astype(cache["h"].dtype)
+        h = h[:, None]
+    else:
+        xc = causal_conv1d(p, xb)
+        log_a, b = _gates(p, xc)  # (B,S,w)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al + ar, bl * jnp.exp(ar) + br
+
+        log_a_cum, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+        if cache is not None and "h" in cache:
+            h = h + cache["h"].astype(jnp.float32)[:, None] * jnp.exp(log_a_cum)
+        if new_cache is not None:
+            new_cache["h"] = h[:, -1].astype(cdtype(cfg))
+            K = cfg.rglru_conv - 1
+            tail = xb[:, S - K :] if S >= K else jnp.pad(xb, ((0, 0), (K - S, 0), (0, 0)))
+            new_cache["conv"] = tail
+
+    y = (h * gate[:, : h.shape[1]]).astype(x.dtype)
+    y = jnp.einsum("bsw,wd->bsd", y, p["out_proj"])
+    return y, new_cache
+
+
+def rglru_cache_shape(cfg, spec, batch, seq_len, has_memory):
+    dt = cdtype(cfg)
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": ((batch, w), dt),
+        "conv": ((batch, cfg.rglru_conv - 1, w), dt),
+    }

@@ -1,0 +1,327 @@
+"""Block assembly: mixer dispatch, macro-block scan over the repeated pattern.
+
+The ONLY lax.scan in the model is the macro-block scan (see DESIGN.md on
+cost_analysis scan accounting). ``scan_groups`` exposes (body, trip_count)
+probes so launch/dryrun.py can correct roofline terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_init, norm_init
+from repro.sharding import shard
+
+_MIXERS = {
+    "attn_full": (attn.gqa_init, attn.gqa_apply, attn.gqa_cache_shape),
+    "attn_local": (attn.gqa_init, attn.gqa_apply, attn.gqa_cache_shape),
+    "attn_cross": (attn.gqa_init, None, attn.gqa_cache_shape),
+    "mla": (attn.mla_init, attn.mla_apply, attn.mla_cache_shape),
+    "ssm": (ssm_mod.ssm_init, ssm_mod.ssm_apply, ssm_mod.ssm_cache_shape),
+    "rglru": (rglru_mod.rglru_init, rglru_mod.rglru_apply, rglru_mod.rglru_cache_shape),
+}
+
+
+# ---------------------------------------------------------------------------
+# One residual block
+# ---------------------------------------------------------------------------
+def block_init(key, cfg, spec):
+    ks = jax.random.split(key, 4)
+    init_fn = _MIXERS[spec.mixer][0]
+    p = {"norm1": norm_init(cfg), "mixer": init_fn(ks[0], cfg, spec) if spec.mixer != "attn_cross" else init_fn(ks[0], cfg, spec)}
+    if spec.cross:
+        p["norm_x"] = norm_init(cfg)
+    if spec.mlp == "dense":
+        p["norm2"] = norm_init(cfg)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    elif spec.mlp == "moe":
+        p["norm2"] = norm_init(cfg)
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, spec)
+    return p
+
+
+def block_apply(p, cfg, spec, x, *, pos, memory, cache, mode):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    h = apply_norm(p["norm1"], cfg, x)
+    if spec.mixer == "attn_cross":
+        y, c = attn.cross_attn_apply(
+            p["mixer"], cfg, spec, h, memory=memory, cache=cache.get("mixer") if cache else None, mode=mode
+        )
+    else:
+        apply_fn = _MIXERS[spec.mixer][1]
+        y, c = apply_fn(
+            p["mixer"], cfg, spec, h,
+            pos=pos, memory=memory,
+            cache=cache.get("mixer") if cache else None, mode=mode,
+        )
+    x = x + y
+    if new_cache is not None:
+        new_cache["mixer"] = c or {}
+
+    if spec.cross and spec.mixer != "attn_cross":
+        h = apply_norm(p["norm_x"], cfg, x)
+        y, c = attn.cross_attn_apply(
+            p["mixer"], cfg, spec, h, memory=memory,
+            cache=cache.get("cross") if cache else None, mode=mode,
+        )
+        x = x + y
+        if new_cache is not None:
+            new_cache["cross"] = c or {}
+
+    if spec.mlp == "dense":
+        x = x + apply_mlp(p["mlp"], cfg, apply_norm(p["norm2"], cfg, x))
+    elif spec.mlp == "moe":
+        y, aux_l = moe_mod.moe_apply(p["moe"], cfg, apply_norm(p["norm2"], cfg, x))
+        x = x + y
+        aux = aux + aux_l
+    x = shard(x, "batch", "seqp", None)
+    return x, new_cache, aux
+
+
+def block_cache_shapes(cfg, spec, batch, seq_len):
+    shapes = {}
+    cache_fn = _MIXERS[spec.mixer][2]
+    shapes["mixer"] = cache_fn(cfg, spec, batch, seq_len, cfg.has_encoder)
+    if spec.cross and spec.mixer != "attn_cross":
+        shapes["cross"] = {
+            k: v
+            for k, v in attn.gqa_cache_shape(cfg, spec, batch, seq_len, True).items()
+            if k.startswith("mem_")
+        }
+        shapes["mixer"] = {
+            k: v for k, v in shapes["mixer"].items() if not k.startswith("mem_")
+        }
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Stack: prefix (unscanned) + pattern (scanned macro-blocks) + suffix
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg):
+    p = {}
+    kp, kq, ks = jax.random.split(key, 3)
+    if cfg.prefix:
+        p["prefix"] = [
+            block_init(jax.random.fold_in(kp, i), cfg, s)
+            for i, s in enumerate(cfg.prefix)
+        ]
+    if cfg.pattern and cfg.n_repeats:
+        def one_macro(k):
+            return {
+                f"l{i}": block_init(jax.random.fold_in(k, i), cfg, s)
+                for i, s in enumerate(cfg.pattern)
+            }
+
+        if cfg.share_pattern_params:
+            p["pattern"] = one_macro(kq)
+        else:
+            p["pattern"] = jax.vmap(one_macro)(jax.random.split(kq, cfg.n_repeats))
+    if cfg.suffix:
+        p["suffix"] = [
+            block_init(jax.random.fold_in(ks, i), cfg, s)
+            for i, s in enumerate(cfg.suffix)
+        ]
+    return p
+
+
+def _constrain_block_params(params_t):
+    """Re-assert FSDP sharding on the per-iteration param slice so XLA
+    all-gathers each layer INSIDE the scan body (ZeRO-3) instead of
+    gathering the whole stacked leaf up front (EXPERIMENTS.md §Perf H2)."""
+    from repro.sharding.specs import get_manual_axes, get_mesh, param_specs
+
+    mesh = get_mesh()
+    if mesh is None or "data" in get_manual_axes():
+        return params_t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    specs = param_specs(params_t, stacked_prefixes=())
+    axes = set(mesh.axis_names)
+
+    def fix(leaf, spec):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        ok = []
+        for dim, e in zip(leaf.shape, entries):
+            if e is None or e not in axes:
+                ok.append(None)
+                continue
+            ok.append(e if dim % mesh.shape[e] == 0 else None)
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, P(*ok)))
+
+    return jax.tree.map(fix, params_t, specs, is_leaf=lambda s: isinstance(s, P))
+
+
+def _macro_apply(params_t, cfg, x, *, pos, memory, cache_t, mode, remat):
+    """Apply one macro-block (len(cfg.pattern) sub-blocks)."""
+    params_t = _constrain_block_params(params_t)
+    new_caches = {}
+    aux = jnp.zeros((), jnp.float32)
+
+    def run(x):
+        nonlocal new_caches, aux
+        out = x
+        for i, spec in enumerate(cfg.pattern):
+            c = cache_t.get(f"l{i}") if cache_t is not None else None
+            out, nc, a = block_apply(
+                params_t[f"l{i}"], cfg, spec, out,
+                pos=pos, memory=memory, cache=c, mode=mode,
+            )
+            if cache_t is not None:
+                new_caches[f"l{i}"] = nc
+            aux = aux + a
+        return out
+
+    x = run(x)
+    return x, new_caches, aux
+
+
+def stack_apply(p, cfg, x, *, pos, memory=None, cache=None, mode="train", remat=True):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+
+    if cfg.prefix:
+        pc = []
+        for i, spec in enumerate(cfg.prefix):
+            c = cache["prefix"][i] if cache is not None else None
+            x, nc, a = block_apply(
+                p["prefix"][i], cfg, spec, x, pos=pos, memory=memory, cache=c, mode=mode
+            )
+            aux = aux + a
+            pc.append(nc)
+        if new_cache is not None:
+            new_cache["prefix"] = pc
+
+    if cfg.pattern and cfg.n_repeats:
+        shared = cfg.share_pattern_params
+
+        def body(carry, xs):
+            xx, aa = carry
+            params_t = p["pattern"] if shared else xs[0]
+            cache_t = xs[1] if cache is not None else None
+            fn = _macro_apply
+            if remat and mode == "train":
+                fn = jax.checkpoint(
+                    lambda pt, xv, ct: _macro_apply(
+                        pt, cfg, xv, pos=pos, memory=memory,
+                        cache_t=ct, mode=mode, remat=False,
+                    ),
+                    static_argnums=(),
+                )
+                xx, nc, a = fn(params_t, xx, cache_t)
+            else:
+                xx, nc, a = _macro_apply(
+                    params_t, cfg, xx, pos=pos, memory=memory,
+                    cache_t=cache_t, mode=mode, remat=False,
+                )
+            return (xx, aa + a), nc
+
+        xs_params = None if shared else p["pattern"]
+        xs_cache = cache["pattern"] if cache is not None else None
+        if xs_params is None and xs_cache is None:
+            xs = (None, None)
+            (x, aux), ncs = jax.lax.scan(
+                lambda c, _: body(c, (None, None)), (x, aux), None,
+                length=cfg.n_repeats,
+            )
+        else:
+            xs = (xs_params, xs_cache)
+            (x, aux), ncs = jax.lax.scan(body, (x, aux), xs)
+        if new_cache is not None:
+            new_cache["pattern"] = ncs
+
+    if cfg.suffix:
+        sc = []
+        for i, spec in enumerate(cfg.suffix):
+            c = cache["suffix"][i] if cache is not None else None
+            x, nc, a = block_apply(
+                p["suffix"][i], cfg, spec, x, pos=pos, memory=memory, cache=c, mode=mode
+            )
+            aux = aux + a
+            sc.append(nc)
+        if new_cache is not None:
+            new_cache["suffix"] = sc
+
+    return x, new_cache, aux
+
+
+def stack_cache_shapes(cfg, batch, seq_len):
+    cache = {}
+    if cfg.prefix:
+        cache["prefix"] = [
+            block_cache_shapes(cfg, s, batch, seq_len) for s in cfg.prefix
+        ]
+    if cfg.pattern and cfg.n_repeats:
+        one = {
+            f"l{i}": block_cache_shapes(cfg, s, batch, seq_len)
+            for i, s in enumerate(cfg.pattern)
+        }
+
+        def add_stack(leaf):
+            shape, dt = leaf
+            return ((cfg.n_repeats,) + shape, dt)
+
+        cache["pattern"] = jax.tree.map(
+            add_stack, one, is_leaf=lambda l: isinstance(l, tuple) and len(l) == 2 and isinstance(l[0], tuple)
+        )
+    if cfg.suffix:
+        cache["suffix"] = [
+            block_cache_shapes(cfg, s, batch, seq_len) for s in cfg.suffix
+        ]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style bidirectional encoder
+# ---------------------------------------------------------------------------
+def encoder_init(key, cfg):
+    from repro.configs.base import LayerSpec
+
+    spec = LayerSpec("attn_full", "dense")
+    def one(k):
+        return block_init(k, cfg, spec)
+
+    p = {
+        "encoder_layers": jax.vmap(one)(jax.random.split(key, cfg.n_encoder_layers)),
+        "encoder_norm": norm_init(cfg),
+        "enc_pos": jnp.zeros((cfg.encoder_len, cfg.d_model), jnp.float32),
+    }
+    return p
+
+
+def encoder_apply(p, cfg, frames):
+    """frames: (B, M, d_model) post-projector. Bidirectional self-attention."""
+    from repro.configs.base import LayerSpec
+
+    spec = LayerSpec("attn_full", "dense")
+    x = frames + p["enc_pos"].astype(frames.dtype)
+
+    def body(carry, params_t):
+        xx = carry
+        h = apply_norm(params_t["norm1"], cfg, xx)
+        y, _ = _encoder_self_attn(params_t["mixer"], cfg, h)
+        xx = xx + y
+        xx = xx + apply_mlp(
+            params_t["mlp"], cfg, apply_norm(params_t["norm2"], cfg, xx)
+        )
+        return xx, None
+
+    x, _ = jax.lax.scan(body, x, p["encoder_layers"])
+    return apply_norm(p["encoder_norm"], cfg, x)
+
+
+def _encoder_self_attn(p, cfg, x):
+    B, S, _ = x.shape
+    H, Kv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = attn._project_q(p, cfg, x)
+    k, v = attn._project_kv(p, cfg, x)
+    msk = jnp.ones((1, 1, 1, S, S), bool)
+    y = attn._dense_attention(q, k, v, msk).reshape(B, S, H * D)
+    y = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return y, None

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    cosine_schedule,
+    constant_schedule,
+    global_norm,
+    clip_by_global_norm,
+    lamb,
+    sgd,
+    warmup_cosine_schedule,
+)

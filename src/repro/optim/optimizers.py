@@ -1,0 +1,174 @@
+"""Optimizers (SGD+Nesterov, Adam, LAMB) and LR schedules.
+
+Minimal optax-style API: ``opt.init(params) -> state``,
+``opt.update(grads, state, params, step) -> (updates, state)``; updates are
+ADDED to params. All states are pytrees of jnp arrays (checkpointable,
+shardable with the same specs as params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def constant_schedule(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr, total_steps, final_scale=0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(np.pi * frac))
+        return lr * (final_scale + (1 - final_scale) * cos)
+
+    return fn
+
+
+def warmup_cosine_schedule(lr, warmup_steps, total_steps, final_scale=0.0):
+    cos = cosine_schedule(lr, max(1, total_steps - warmup_steps), final_scale)
+
+    def fn(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-30))
+    return jax.tree.map(lambda l: (l * scale).astype(l.dtype), tree), g
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def _sched(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+def sgd(lr, momentum=0.0, nesterov=False, weight_decay=0.0):
+    lr = _sched(lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+
+        def upd(g, p, m=None):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if m is None:
+                return -lr_t * g, None
+            m_new = momentum * m + g
+            d = g + momentum * m_new if nesterov else m_new
+            return -lr_t * d, m_new
+
+        if momentum == 0.0:
+            ups = jax.tree.map(lambda g, p: upd(g, p)[0], grads, params)
+            return ups, state
+        pairs = jax.tree.map(upd, grads, params, state["m"])
+        ups = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return ups, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    lr = _sched(lr)
+
+    def init(params):
+        z = lambda l: jnp.zeros(l.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        t = step + 1
+
+        def upd(g, p, m, v):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / (1 - b1**t)
+            vhat = v_new / (1 - b2**t)
+            d = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return -lr_t * d, m_new, v_new
+
+        tri = jax.tree.map(upd, grads, params, state["m"], state["v"])
+        leaf = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda tr: tr[0], tri, is_leaf=leaf),
+            {
+                "m": jax.tree.map(lambda tr: tr[1], tri, is_leaf=leaf),
+                "v": jax.tree.map(lambda tr: tr[2], tri, is_leaf=leaf),
+            },
+        )
+
+    return Optimizer(init, update)
+
+
+def lamb(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01):
+    """LAMB (You et al. 2020) — the paper's ALBERT optimizer (§4.2)."""
+    lr = _sched(lr)
+
+    def init(params):
+        z = lambda l: jnp.zeros(l.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr(step)
+        t = step + 1
+
+        def upd(g, p, m, v):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mhat = m_new / (1 - b1**t)
+            vhat = v_new / (1 - b2**t)
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf
+            w_norm = jnp.linalg.norm(pf.reshape(-1))
+            u_norm = jnp.linalg.norm(u.reshape(-1))
+            trust = jnp.where(
+                (w_norm > 0) & (u_norm > 0), w_norm / jnp.maximum(u_norm, 1e-30), 1.0
+            )
+            return -lr_t * trust * u, m_new, v_new
+
+        tri = jax.tree.map(upd, grads, params, state["m"], state["v"])
+        leaf = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda tr: tr[0], tri, is_leaf=leaf),
+            {
+                "m": jax.tree.map(lambda tr: tr[1], tri, is_leaf=leaf),
+                "v": jax.tree.map(lambda tr: tr[2], tri, is_leaf=leaf),
+            },
+        )
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)

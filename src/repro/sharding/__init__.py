@@ -1,0 +1,9 @@
+from repro.sharding.specs import (  # noqa: F401
+    activation_spec,
+    batch_axes,
+    param_specs,
+    set_mesh,
+    get_mesh,
+    shard,
+    peer_axes,
+)

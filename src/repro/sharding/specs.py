@@ -1,0 +1,190 @@
+"""Sharding rules: FSDP('data') x TP('model') x pod, with activation helpers.
+
+The model code calls ``shard(x, 'batch', None, 'model')`` with *logical* axis
+names; when no mesh is registered (unit tests on one device) this is a no-op,
+so the same model runs single-device and distributed.
+
+Logical axis vocabulary:
+  'batch'  -> all batch-parallel mesh axes present: ('pod', 'data')
+  'fsdp'   -> 'data' (parameter sharding axis)
+  'model'  -> 'model' (tensor/expert parallel axis)
+  'seq'    -> 'data' (sequence sharding for long-context decode KV caches)
+  None     -> replicated
+"""
+from __future__ import annotations
+
+import re
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_mesh(mesh) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def set_manual_axes(axes) -> None:
+    """Axes currently under a manual shard_map region: shard() must not
+    constrain over them (trace-time thread-local)."""
+    _state.manual = tuple(axes)
+
+
+def get_manual_axes():
+    return getattr(_state, "manual", ())
+
+
+def set_seq_parallel(on: bool) -> None:
+    """Megatron-style sequence parallelism: residual-stream activations are
+    sharded over 'model' along the sequence dim between blocks (see
+    EXPERIMENTS.md §Perf)."""
+    _state.seqp = bool(on)
+
+
+def get_seq_parallel() -> bool:
+    return getattr(_state, "seqp", False)
+
+
+def _mesh_axes():
+    mesh = get_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def batch_axes():
+    """Mesh axes over which the global batch is sharded."""
+    return tuple(a for a in ("pod", "data") if a in _mesh_axes())
+
+
+def peer_axes():
+    """Mesh axes forming the BTARD peer dimension (see DESIGN.md §2)."""
+    return batch_axes()
+
+
+def _resolve(logical):
+    axes = _mesh_axes()
+    manual = get_manual_axes()
+    if logical is None:
+        return None
+    if logical == "batch":
+        got = tuple(a for a in batch_axes() if a not in manual)
+        return got if got else None
+    if logical == "fsdp" or logical == "seq":
+        return "data" if "data" in axes and "data" not in manual else None
+    if logical == "seqp":  # sequence-parallel residual stream (opt-in)
+        on = get_seq_parallel()
+        return "model" if on and "model" in axes and "model" not in manual else None
+    if logical == "model":
+        return "model" if "model" in axes and "model" not in manual else None
+    # a raw mesh axis name
+    return logical if logical in axes and logical not in manual else None
+
+
+def activation_spec(*logical) -> P:
+    return P(*[_resolve(l) for l in logical])
+
+
+def shard(x, *logical):
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = activation_spec(*logical)
+    # drop axes whose product does not divide the dim (e.g. seq=1 decode)
+    entries = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        entries.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )
+
+
+# ===========================================================================
+# Parameter sharding rules
+# ===========================================================================
+# Keyed on the *leaf name* produced by the model initializers. Rank refers to
+# the un-stacked (per-layer) rank; stacked pattern params get a leading None.
+# fsdp shards the contraction-side dim; model shards heads/ff/experts/vocab.
+_RULES = [
+    # name regex, spec for the trailing dims
+    (r"embed$", ("model", "fsdp")),  # (vocab, d)
+    (r"lm_head$", ("fsdp", "model")),  # (d, vocab)
+    (r"pos_embed$", (None, "fsdp")),
+    (r"projector$", ("fsdp", None)),
+    (r"(wq|wk|wv)$", ("fsdp", "model")),
+    (r"(wq|wk|wv)_bias$", ("model",)),
+    (r"wo$", ("model", "fsdp")),
+    (r"(wi|wg)$", ("fsdp", "model")),
+    (r"wdown$", ("model", "fsdp")),
+    (r"router$", ("fsdp", None)),
+    (r"experts_(wi|wg)$", ("model", "fsdp", None)),  # (E, d, ff)
+    (r"experts_wdown$", ("model", None, "fsdp")),  # (E, ff, d)
+    # MLA
+    (r"kv_a$", ("fsdp", None)),
+    (r"kv_b$", (None, "model")),
+    (r"q_a$", ("fsdp", None)),
+    (r"q_b$", (None, "model")),
+    # SSM / RG-LRU
+    (r"in_proj$", ("fsdp", "model")),
+    (r"out_proj$", ("model", "fsdp")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$", ("model",)),
+    (r"(A_log|D|dt_bias)$", ("model",)),
+    (r"(wa|wx)$", ("fsdp", "model")),
+    (r"lam$", ("model",)),
+    (r"(gate_w)$", ("fsdp", "model")),
+    # norms and other vectors: replicated
+    (r".*", None),
+]
+
+
+def _spec_for_leaf(path: str, ndim: int, stacked: bool) -> P:
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            resolved = [_resolve(s) for s in spec]
+            if stacked:
+                resolved = [None] + resolved
+            # pad/trim to ndim
+            while len(resolved) < ndim:
+                resolved.insert(0, None)
+            resolved = resolved[-ndim:] if len(resolved) > ndim else resolved
+            return P(*resolved)
+    return P()
+
+
+def param_specs(params, stacked_prefixes=("pattern", "encoder_layers")):
+    """PartitionSpec pytree matching ``params``.
+
+    Leaves under a stacked group (scanned macro-blocks) carry a leading
+    layer-stack dim which is kept unsharded (sliced by the scan).
+    """
+
+    def walk(tree, path, stacked):
+        if isinstance(tree, dict):
+            return {
+                k: walk(
+                    v,
+                    f"{path}/{k}",
+                    stacked or k in stacked_prefixes,
+                )
+                for k, v in tree.items()
+            }
+        if isinstance(tree, (list, tuple)):
+            out = [walk(v, f"{path}/{i}", stacked) for i, v in enumerate(tree)]
+            return type(tree)(out)
+        return _spec_for_leaf(path, tree.ndim, stacked)
+
+    return walk(params, "", False)

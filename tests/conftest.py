@@ -1,0 +1,22 @@
+import os
+
+# Smoke tests and benches must see ONE device (the 512-device override lives
+# exclusively in launch/dryrun.py and the subprocess sharding tests).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)
+
+
+@pytest.fixture(autouse=True)
+def _reset_sharding_state():
+    """Tests may register (fake) meshes / seq-parallel flags; never leak."""
+    yield
+    from repro.sharding import set_mesh
+    from repro.sharding.specs import set_manual_axes, set_seq_parallel
+
+    set_mesh(None)
+    set_manual_axes(())
+    set_seq_parallel(False)

@@ -1,0 +1,80 @@
+"""Baseline aggregators + attack zoo unit tests (paper §4.1 building blocks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as atk
+from repro.core.aggregators import (
+    coordinate_median,
+    geometric_median,
+    krum,
+    mean_agg,
+    ps_centered_clip,
+    trimmed_mean,
+)
+
+
+def _data(b=3, n=10, d=16, scale=100.0):
+    honest = jax.random.normal(jax.random.key(0), (n - b, d))
+    bad = scale * jnp.ones((b, d))
+    return jnp.concatenate([honest, bad]), honest
+
+
+@pytest.mark.parametrize(
+    "agg,kw",
+    [
+        (coordinate_median, {}),
+        (geometric_median, {}),
+        (trimmed_mean, {"trim_ratio": 0.3}),
+        (krum, {"n_byzantine": 3}),
+        (ps_centered_clip, {"tau": 1.0}),
+    ],
+)
+def test_robust_aggregators_resist_large_outliers(agg, kw):
+    xs, honest = _data()
+    v = agg(xs, **kw)
+    assert float(jnp.linalg.norm(v - honest.mean(0))) < 5.0
+
+
+def test_mean_is_broken_by_one_attacker():
+    xs, honest = _data(b=1)
+    v = mean_agg(xs)
+    assert float(jnp.linalg.norm(v - honest.mean(0))) > 5.0
+
+
+def test_sign_flip_shapes_and_direction():
+    g = jax.random.normal(jax.random.key(1), (8, 32))
+    mask = jnp.arange(8) >= 5
+    out = atk.sign_flip(g, mask, lam=1000.0)
+    np.testing.assert_allclose(np.asarray(out[:5]), np.asarray(g[:5]))
+    np.testing.assert_allclose(np.asarray(out[5:]), np.asarray(-1000.0 * g[5:]))
+
+
+def test_ipm_sends_negative_scaled_honest_mean():
+    g = jax.random.normal(jax.random.key(2), (8, 32))
+    mask = jnp.arange(8) >= 6
+    out = atk.ipm(g, mask, epsilon=0.6)
+    mu = g[:6].mean(0)
+    np.testing.assert_allclose(np.asarray(out[6]), np.asarray(-0.6 * mu), atol=1e-5)
+
+
+def test_alie_stays_within_population_spread():
+    """ALIE's point is staying inside the honest variance envelope."""
+    g = jax.random.normal(jax.random.key(3), (16, 64))
+    mask = jnp.arange(16) >= 9
+    out = atk.alie(g, mask)
+    mu = g[:9].mean(0)
+    sd = g[:9].std(0, ddof=1)
+    dev = jnp.abs(out[9] - mu) / jnp.maximum(sd, 1e-6)
+    assert float(dev.max()) < 4.0  # z_max is small for these (n, b)
+
+
+def test_random_direction_common_vector():
+    g = jax.random.normal(jax.random.key(4), (8, 32))
+    mask = jnp.arange(8) >= 5
+    out = atk.random_direction(g, mask, key=jax.random.key(0), lam=100.0)
+    # all attackers send the SAME vector
+    np.testing.assert_allclose(np.asarray(out[5]), np.asarray(out[6]))
+    np.testing.assert_allclose(np.asarray(out[6]), np.asarray(out[7]))
+    assert float(jnp.linalg.norm(out[5])) > 10 * float(jnp.linalg.norm(g[0]))

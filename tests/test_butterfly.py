@@ -1,0 +1,71 @@
+"""ButterflyClip + verification-table tests (paper Alg. 2/6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import butterfly as bf
+from repro.core.centered_clip import centered_clip
+
+
+def test_split_merge_roundtrip():
+    g = jax.random.normal(jax.random.key(0), (5, 103))
+    parts = bf.split_parts(g, 5)
+    for i in range(5):
+        np.testing.assert_allclose(
+            np.asarray(bf.merge_parts(parts[i], 103)), np.asarray(g[i])
+        )
+
+
+def test_butterfly_equals_per_partition_clip():
+    n, d, tau = 8, 200, 1.0
+    g = jax.random.normal(jax.random.key(1), (n, d))
+    agg, parts = bf.butterfly_clip(g, tau, n_iters=40)
+    for j in range(n):
+        ref = centered_clip(parts[:, j], tau, n_iters=40)
+        np.testing.assert_allclose(np.asarray(agg[j]), np.asarray(ref), atol=1e-5)
+
+
+def test_checksum_zero_for_honest_aggregation():
+    n, d = 8, 512
+    g = jax.random.normal(jax.random.key(2), (n, d))
+    agg, parts = bf.butterfly_clip(g, tau=1.0, n_iters=200)
+    z = bf.get_random_directions(7, n, parts.shape[-1])
+    s, norms = bf.verification_tables(parts, agg, z, 1.0)
+    sums, violated = bf.checksum_violations(s, None, tol=1e-3)
+    assert not bool(violated.any()), np.asarray(sums)
+
+
+def test_checksum_catches_corrupted_partition():
+    """A malicious aggregator shifting its partition breaks sum_i s_i^j = 0
+    with probability 1 (paper eq. (10))."""
+    n, d = 8, 512
+    g = jax.random.normal(jax.random.key(3), (n, d))
+    agg, parts = bf.butterfly_clip(g, tau=1.0, n_iters=200)
+    agg = agg.at[3].add(0.05 * jax.random.normal(jax.random.key(4), agg[3].shape))
+    z = bf.get_random_directions(7, n, parts.shape[-1])
+    s, norms = bf.verification_tables(parts, agg, z, 1.0)
+    sums, violated = bf.checksum_violations(s, None, tol=1e-3)
+    assert bool(violated[3])
+    assert not bool(violated[jnp.arange(n) != 3].any())
+
+
+def test_delta_max_votes_flag_outlier_partition():
+    n, d = 8, 512
+    g = jax.random.normal(jax.random.key(5), (n, d)) * 0.1
+    agg, parts = bf.butterfly_clip(g, tau=10.0, n_iters=50)
+    agg = agg.at[2].add(100.0)  # grossly corrupted partition
+    z = bf.get_random_directions(1, n, parts.shape[-1])
+    _, norms = bf.verification_tables(parts, agg, z, 10.0)
+    votes, trig = bf.delta_max_votes(norms, None, delta_max=5.0)
+    assert bool(trig[2]) and not bool(trig[jnp.arange(n) != 2].any())
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), d=st.integers(2, 300), seed=st.integers(0, 9999))
+def test_property_butterfly_mean_matches_allreduce(n, d, seed):
+    """tau=inf butterfly == plain all-reduce mean for any (n, d)."""
+    g = jax.random.normal(jax.random.key(seed), (n, d))
+    agg, _ = bf.butterfly_clip(g, np.inf, n_iters=3)
+    got = bf.merge_parts(agg, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(g.mean(0)), atol=1e-4)

@@ -1,0 +1,125 @@
+"""CenteredClip unit + property tests (paper §2.2 / D.2 invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.centered_clip import (
+    centered_clip,
+    centered_clip_to_tol,
+    clip_residuals,
+    tau_schedule,
+)
+from repro.core.aggregators import geometric_median
+
+
+def _rand(n, d, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.key(seed), (n, d))
+
+
+def test_tau_inf_is_mean():
+    xs = _rand(8, 32)
+    v = centered_clip(xs, np.inf, n_iters=5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(xs.mean(0)), atol=1e-5)
+
+
+def test_weights_exclude_banned():
+    xs = _rand(8, 16)
+    w = jnp.array([1, 1, 1, 1, 0, 0, 0, 0], jnp.float32)
+    v = centered_clip(xs, np.inf, n_iters=5, weights=w)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(xs[:4].mean(0)), atol=1e-5)
+
+
+def test_fixed_point_residual_zero():
+    """At the fixed point, sum_i Delta_i = 0 — the Verification-2 identity."""
+    xs = _rand(12, 64, seed=3)
+    v, iters = centered_clip_to_tol(xs, tau=1.0, eps=1e-7)
+    res = clip_residuals(xs, v, 1.0)
+    assert float(jnp.abs(res.sum(0)).max()) < 1e-4
+
+
+def test_bounded_shift_under_attack():
+    """Gradient attacks shift CenteredClip by O(tau * b / (n-b)) — paper
+    App. C: 'b Byzantine peers can collectively shift the outputs ... by up
+    to tau*b/n'. At the fixed point the attackers' clipped pull is b*tau,
+    balanced by the (n-b) honest pulls, so |shift| <~ tau*b/(n-b) plus the
+    honest spread — crucially INDEPENDENT of the 1000x attack amplitude."""
+    n, b, d, tau = 16, 7, 128, 1.0
+    honest = _rand(n - b, d, seed=1, scale=0.1)
+    attack = 1000.0 * jnp.ones((b, d))
+    xs = jnp.concatenate([honest, attack])
+    v, _ = centered_clip_to_tol(xs, tau, eps=1e-7, max_iters=2000)
+    shift = float(jnp.linalg.norm(v - honest.mean(0)))
+    assert shift <= 2.0 * tau * b / (n - b), shift
+    # and the mean would have been catastrophically wrong:
+    assert float(jnp.linalg.norm(xs.mean(0) - honest.mean(0))) > 100.0
+
+
+def test_small_tau_approaches_geometric_median():
+    xs = jnp.concatenate([_rand(10, 8, seed=2), 50.0 + _rand(3, 8, seed=4)])
+    v, _ = centered_clip_to_tol(xs, tau=0.05, eps=1e-8, max_iters=2000)
+    gm = geometric_median(xs, eps=1e-8, max_iters=2000)
+    # both should sit near the honest cluster, far from the outliers
+    assert float(jnp.linalg.norm(v - gm)) < 2.0
+
+
+def test_tau_schedule_eq5():
+    taus = tau_schedule(delta=0.1, sigma=2.0, n_iters=3)
+    # manual eq. (5): B0=0 -> tau0 = 4*sqrt(0.9*(4)/(sqrt(3)*0.1))
+    t0 = 4 * np.sqrt(0.9 * 4.0 / (np.sqrt(3) * 0.1))
+    assert abs(taus[0] - t0) < 1e-4
+    b2 = 5 * 4.0 * 1 * 0 + 6.45 * 0.1 * 0 + 5 * 4.0
+    t1 = 4 * np.sqrt(0.9 * (b2 / 3 + 4.0) / (np.sqrt(3) * 0.1))
+    assert abs(taus[1] - t1) < 1e-3
+    assert np.isinf(tau_schedule(0.0, 1.0, 2)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 20),
+    d=st.integers(1, 64),
+    tau=st.floats(0.1, 100.0),
+    seed=st.integers(0, 10_000),
+)
+def test_property_idempotent_on_consensus(n, d, tau, seed):
+    """If all peers send the same vector, the aggregate IS that vector.
+    (Convergence from v0=0 takes ~||x||/tau steps: each iteration moves by at
+    most tau until the point is within the clip radius, then lands exactly.)"""
+    x = jax.random.normal(jax.random.key(seed), (d,))
+    xs = jnp.broadcast_to(x, (n, d))
+    iters = int(float(jnp.linalg.norm(x)) / tau) + 5
+    v = centered_clip(xs, tau, n_iters=iters)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(x), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 16),
+    d=st.integers(2, 32),
+    seed=st.integers(0, 10_000),
+    perm_seed=st.integers(0, 10_000),
+)
+def test_property_permutation_invariant(n, d, seed, perm_seed):
+    xs = jax.random.normal(jax.random.key(seed), (n, d))
+    perm = jax.random.permutation(jax.random.key(perm_seed), n)
+    v1 = centered_clip(xs, 1.0, n_iters=30)
+    v2 = centered_clip(xs[perm], 1.0, n_iters=30)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 16),
+    d=st.integers(2, 32),
+    seed=st.integers(0, 10_000),
+)
+def test_property_within_convex_hull_bound(n, d, seed):
+    """Aggregate norm never exceeds the max input norm (tau=inf mean case
+    and clipped case both)."""
+    xs = jax.random.normal(jax.random.key(seed), (n, d)) * 3
+    for tau in [0.5, 5.0, np.inf]:
+        v = centered_clip(xs, tau, n_iters=30)
+        assert float(jnp.linalg.norm(v)) <= float(
+            jnp.linalg.norm(xs, axis=1).max()
+        ) + 1e-3

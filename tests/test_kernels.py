@@ -1,0 +1,96 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import butterfly_clip_op, centered_clip_op, verify_tables_op
+from repro.kernels.ref import centered_clip_ref, verify_tables_ref
+
+SHAPES = [(4, 128), (8, 257), (16, 1000), (32, 2048), (7, 999), (3, 130)]
+DTYPES = ["float32", "bfloat16"]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_centered_clip_kernel_sweep(shape, dtype):
+    n, d = shape
+    xs = (jax.random.normal(jax.random.key(n * d), (n, d)) * 2 + 0.5).astype(dtype)
+    tau = 1.0
+    taus = jnp.full((12,), tau, jnp.float32)
+    got = centered_clip_op(xs, tau, n_iters=12)
+    want = centered_clip_ref(xs, taus)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_verify_tables_kernel_sweep(shape, dtype):
+    n, d = shape
+    xs = (jax.random.normal(jax.random.key(d), (n, d)) * 3).astype(dtype)
+    v = jax.random.normal(jax.random.key(1), (d,)).astype(dtype)
+    z = jax.random.normal(jax.random.key(2), (d,))
+    z = (z / jnp.linalg.norm(z)).astype(dtype)
+    s_k, n_k = verify_tables_op(xs, v, z, 0.7)
+    s_r, n_r = verify_tables_ref(xs, v, z, 0.7)
+    tol = 1e-4 if dtype == "float32" else 1e-1
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_r), atol=tol, rtol=tol)
+
+
+def test_kernel_weights_mask():
+    xs = jax.random.normal(jax.random.key(0), (8, 300))
+    w = jnp.array([1, 0, 1, 0, 1, 1, 1, 0], jnp.float32)
+    got = centered_clip_op(xs, 2.0, w, n_iters=10)
+    want = centered_clip_ref(xs, jnp.full((10,), 2.0), w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_kernel_tau_inf_mean():
+    xs = jax.random.normal(jax.random.key(0), (6, 500))
+    got = centered_clip_op(xs, np.inf, n_iters=3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(xs.mean(0)), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    d=st.integers(2, 1500),
+    tau=st.floats(0.2, 50.0),
+    iters=st.integers(1, 20),
+    seed=st.integers(0, 99999),
+)
+def test_property_kernel_matches_ref(n, d, tau, iters, seed):
+    xs = jax.random.normal(jax.random.key(seed), (n, d)) * 2
+    got = centered_clip_op(xs, tau, n_iters=iters)
+    want = centered_clip_ref(xs, jnp.full((iters,), tau, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 8, 300), (4, 16, 1025), (3, 6, 128)])
+def test_butterfly_batched_kernel_matches_per_partition_ref(shape):
+    """The all-partition ButterflyClip kernel == per-partition oracle."""
+    n_parts, n, d = shape
+    parts = jax.random.normal(jax.random.key(n_parts * d), (n_parts, n, d)) * 2
+    w = jnp.where(jnp.arange(n) % 4 == 0, 0.0, 1.0)
+    got = butterfly_clip_op(parts, 1.0, w, n_iters=10)
+    taus = jnp.full((10,), 1.0, jnp.float32)
+    want = jnp.stack([centered_clip_ref(parts[j], taus, w) for j in range(n_parts)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    d=st.integers(2, 2000),
+    blk=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 99999),
+)
+def test_property_block_size_invariance(n, d, blk, seed):
+    """Kernel output must not depend on the VMEM block geometry."""
+    xs = jax.random.normal(jax.random.key(seed), (n, d))
+    a = centered_clip_op(xs, 1.0, n_iters=8, block=blk)
+    b = centered_clip_op(xs, 1.0, n_iters=8, block=2048)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,118 @@
+"""Launch-layer consistency: cache/batch specs match the abstract trees for
+every (arch x shape), and the restarted BTARD variant converges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_applicable
+from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
+from repro.core.btard_sgd import restarted_btard_sgd
+from repro.data import classification_batch, peer_seed
+from repro.launch import input_specs as ispecs
+from repro.models import Model
+from repro.optim import sgd
+from repro.sharding import set_mesh
+
+
+class _FakeMesh:
+    """Just enough mesh for spec construction (no devices touched)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_cache_specs_cover_cache_tree(arch):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    set_mesh(mesh)
+    for shape in INPUT_SHAPES.values():
+        if shape.kind == "train" or not shape_applicable(cfg, shape):
+            continue
+        cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+        specs = ispecs.cache_specs(model, shape, mesh)
+        # identical tree structure => every cache leaf has a spec
+        s1 = jax.tree.structure(
+            jax.tree.map(lambda _: 0, cache_abs)
+        )
+        s2 = jax.tree.structure(
+            jax.tree.map(
+                lambda _: 0, specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+        )
+        assert s1 == s2, (arch, shape.name)
+        # spec rank never exceeds leaf rank
+        flat_specs = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        flat_abs = jax.tree.leaves(cache_abs)
+        for sp, leaf in zip(flat_specs, flat_abs):
+            assert len(sp) <= leaf.ndim, (arch, shape.name, sp, leaf.shape)
+
+
+def test_long500k_cache_is_sequence_sharded():
+    cfg = get_config("gemma3-27b")
+    model = Model(cfg)
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    set_mesh(mesh)
+    specs = ispecs.cache_specs(model, INPUT_SHAPES["long_500k"], mesh)
+    flat = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )
+    # at least the KV leaves shard their sequence dim over 'data'
+    assert any("data" in tuple(s) for s in flat)
+
+
+def test_decode32k_cache_is_batch_sharded():
+    cfg = get_config("gemma3-27b")
+    model = Model(cfg)
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    set_mesh(mesh)
+    specs = ispecs.cache_specs(model, INPUT_SHAPES["decode_32k"], mesh)
+    flat = [
+        tuple(s)
+        for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+    ]
+    assert any(s and s[0] == "data" for s in flat)
+
+
+def test_restarted_btard_sgd_converges():
+    set_mesh(None)
+    """Alg. 8: halving-radius restarts on the strongly convex problem."""
+    DIM, CLASSES = 8, 2
+
+    def batch_fn(peer, step, flipped):
+        return classification_batch(peer_seed(0, step, peer), 16, DIM, CLASSES)
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"]
+        return -jnp.mean(
+            jnp.take_along_axis(
+                jax.nn.log_softmax(logits), batch["y"][:, None], axis=1
+            )
+        ) + 1e-3 * jnp.sum(params["w"] ** 2)
+
+    def make_trainer(lr, params0):
+        cfg = TrainerConfig(
+            n_peers=8, byzantine=(7,),
+            attack=AttackConfig(kind="sign_flip", start_step=0),
+            defense="btard", tau=1.0, m_validators=2,
+        )
+        p0 = params0 or {"w": jnp.zeros((DIM, CLASSES))}
+        return BTARDTrainer(loss_fn, p0, batch_fn, cfg, optimizer=sgd(lr, momentum=0.9))
+
+    params, hist = restarted_btard_sgd(
+        make_trainer, n_restarts=3,
+        steps_fn=lambda r: 8 * (r + 1),
+        lr_fn=lambda r: 0.4 * (0.5**r),
+    )
+    eval_b = classification_batch(10**7, 512, DIM, CLASSES)
+    acc = float((jnp.argmax(eval_b["x"] @ params["w"], 1) == eval_b["y"]).mean())
+    assert acc > 0.9, acc
+    assert any(h.get("restart") == 2 for h in hist)

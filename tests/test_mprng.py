@@ -1,0 +1,45 @@
+"""MPRNG commit/reveal protocol tests (paper App. A.2)."""
+import numpy as np
+import pytest
+
+from repro.core.mprng import AbortingPeer, LyingPeer, MPRNGPeer, run_mprng
+
+
+def test_honest_consensus_and_determinism():
+    rng = np.random.default_rng(0)
+    peers = [MPRNGPeer(i) for i in range(8)]
+    v1, banned, rounds = run_mprng(peers, rng)
+    assert banned == [] and rounds == 1
+    rng2 = np.random.default_rng(0)
+    v2, _, _ = run_mprng([MPRNGPeer(i) for i in range(8)], rng2)
+    assert v1 == v2  # same randomness -> same output (recomputable by all)
+
+
+def test_lying_peer_banned():
+    rng = np.random.default_rng(1)
+    peers = [MPRNGPeer(i) for i in range(7)] + [LyingPeer(7)]
+    v, banned, rounds = run_mprng(peers, rng)
+    assert banned == [7]
+    assert rounds >= 2  # restart happened
+
+
+def test_aborting_attacker_banned_and_bias_removed():
+    """The abort-bias attack: attacker aborts when it dislikes the result.
+    The protocol bans it and re-rolls WITHOUT it, so the final output cannot
+    be biased by aborts (paper App. A.2 last paragraph)."""
+    outs = []
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        peers = [MPRNGPeer(i) for i in range(7)] + [AbortingPeer(7)]
+        v, banned, _ = run_mprng(peers, rng)
+        # attacker either revealed honestly (liked the outcome) or is banned
+        outs.append(v % 2)
+    # if the abort-bias worked, all outputs would be even; they must not be
+    assert 0 < sum(outs) < 40, sum(outs)
+
+
+def test_output_bits_roughly_uniform():
+    rng = np.random.default_rng(2)
+    vals = [run_mprng([MPRNGPeer(i) for i in range(4)], rng)[0] % 2 for _ in range(200)]
+    frac = sum(vals) / len(vals)
+    assert 0.35 < frac < 0.65, frac

@@ -1,0 +1,138 @@
+"""BTARD protocol state-machine tests (paper Alg. 4-7 + App. C attack zoo)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import AttackConfig, BTARDProtocol
+
+D = 48
+
+
+def _grad_fn_factory():
+    w_true = np.asarray(jax.random.normal(jax.random.key(9), (D,)))
+
+    def grad_fn(peer, step, params, flipped=False):
+        k = jax.random.key((peer * 7919 + step) % 2**31)
+        X = jax.random.normal(k, (4, D))
+        y = X @ w_true
+        if flipped:
+            y = -y
+        g = 2 * X.T @ (X @ np.asarray(params) - np.asarray(y)) / 4
+        return np.asarray(g, np.float32)
+
+    return grad_fn
+
+
+def _protocol(attack, byz=(5, 6, 7), m=2, **kw):
+    return BTARDProtocol(
+        n_peers=8,
+        d=D,
+        grad_fn=_grad_fn_factory(),
+        byzantine=set(byz),
+        attack=attack,
+        tau=1.0,
+        m_validators=m,
+        seed=0,
+        **kw,
+    )
+
+
+def _run(proto, steps=25):
+    params = np.zeros(D, np.float32)
+    for t in range(steps):
+        g, info = proto.step(params, t)
+        params = params - 0.05 * g
+        if proto.byzantine <= proto.banned:
+            break
+    return params, proto
+
+
+@pytest.mark.parametrize(
+    "kind", ["sign_flip", "random_direction", "ipm_06", "alie", "label_flip"]
+)
+def test_attackers_banned_and_no_honest_casualties(kind):
+    proto = _protocol(AttackConfig(kind=kind, start_step=2))
+    _, proto = _run(proto, steps=40)
+    assert proto.byzantine <= proto.banned, (kind, proto.banned)
+    honest_banned = proto.banned - proto.byzantine
+    assert not honest_banned, (kind, honest_banned)
+
+
+def test_no_attack_no_bans():
+    proto = _protocol(AttackConfig(kind="none"))
+    _, proto = _run(proto, steps=10)
+    assert proto.banned == set()
+
+
+def test_false_accusation_bans_the_accuser():
+    """Byzantine validators slandering honest peers get banned themselves
+    (the Hammurabi rule, Alg. 3)."""
+    proto = BTARDProtocol(
+        n_peers=8, d=D, grad_fn=_grad_fn_factory(), byzantine={6, 7},
+        attack=AttackConfig(kind="none", start_step=0, false_accuse=True),
+        tau=1.0, m_validators=3, seed=1,
+    )
+    params = np.zeros(D, np.float32)
+    banned_reasons = []
+    for t in range(30):
+        g, info = proto.step(params, t)
+        banned_reasons += info.banned_now
+        if {6, 7} <= proto.banned:
+            break
+    # eventually the slandering validators ban themselves; honest all alive
+    assert proto.banned <= {6, 7}
+    assert not any(p not in {6, 7} for p, _ in banned_reasons)
+
+
+def test_aggregator_attack_detected_via_checksum():
+    proto = _protocol(
+        AttackConfig(
+            kind="none",
+            start_step=1,
+            aggregator_attack=True,
+            aggregator_scale=0.5,
+            misreport_s=False,
+        ),
+        byz=(6, 7),
+    )
+    params = np.zeros(D, np.float32)
+    total_violations = 0
+    for t in range(12):
+        g, info = proto.step(params, t)
+        total_violations += info.checksum_violations
+        if {6, 7} <= proto.banned:
+            break
+    assert total_violations > 0
+    assert {6, 7} <= proto.banned
+
+
+def test_misreported_s_caught_by_validators():
+    """Colluders cancel the checksum; validators recompute s and ban both the
+    liar and the corrupt aggregator (App. D.5)."""
+    proto = _protocol(
+        AttackConfig(
+            kind="none", start_step=0,
+            aggregator_attack=True, aggregator_scale=0.3, misreport_s=True,
+        ),
+        byz=(6, 7), m=3,
+    )
+    params = np.zeros(D, np.float32)
+    for t in range(40):
+        g, info = proto.step(params, t)
+        if {6, 7} <= proto.banned:
+            break
+    assert {6, 7} <= proto.banned
+    assert not (proto.banned - {6, 7})
+
+
+def test_training_converges_with_byzantines_banned():
+    proto = _protocol(AttackConfig(kind="sign_flip", start_step=3))
+    params = np.zeros(D, np.float32)
+    for t in range(60):
+        g, _ = proto.step(params, t)
+        params = params - 0.05 * g
+    # after bans, SGD should reach near the optimum
+    final_grad = _grad_fn_factory()(0, 10**6, params)
+    assert np.linalg.norm(params) > 1.0  # moved away from init
+    assert proto.byzantine <= proto.banned

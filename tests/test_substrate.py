@@ -1,0 +1,96 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import TokenPipeline, classification_batch, peer_seed
+from repro.optim import (
+    adam,
+    clip_by_global_norm,
+    cosine_schedule,
+    lamb,
+    sgd,
+    warmup_cosine_schedule,
+)
+from repro.optim.optimizers import apply_updates, global_norm
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "opt", [sgd(0.1), sgd(0.1, momentum=0.9, nesterov=True), adam(0.05), lamb(0.1)]
+)
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.ones((8,)) * 3.0, "b": jnp.ones(())}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    state = opt.init(params)
+    for step in range(150):
+        g = jax.grad(loss)(params)
+        ups, state = opt.update(g, state, params, step)
+        params = apply_updates(params, ups)
+    assert float(loss(params)) < 0.05
+
+
+def test_cosine_schedule_endpoints():
+    s = cosine_schedule(1.0, 100)
+    assert abs(float(s(0)) - 1.0) < 1e-6
+    assert float(s(100)) < 1e-6
+    w = warmup_cosine_schedule(1.0, 10, 110)
+    assert float(w(0)) == 0.0
+    assert abs(float(w(10)) - 1.0) < 1e-6
+
+
+def test_global_norm_clip():
+    tree = {"a": jnp.ones((4,)) * 10.0}
+    clipped, g = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert abs(float(g) - 20.0) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+def test_pipeline_determinism_public_seeds():
+    """xi_i^t: any peer can recompute any other's batch — the paper's
+    public-data assumption."""
+    p = TokenPipeline(128, 16, 4)
+    b1 = p.batch(step=3, peer=2)
+    b2 = p.batch(step=3, peer=2)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = p.batch(step=3, peer=1)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert peer_seed(0, 3, 2) != peer_seed(0, 2, 3)
+
+
+def test_pipeline_learnable_structure():
+    """80% of transitions follow x -> (a x + c) % V."""
+    p = TokenPipeline(97, 256, 2, a=5, c=7, noise=0.2)
+    toks = np.asarray(p.batch(0)["tokens"])
+    match = (toks[:, 1:] == (5 * toks[:, :-1] + 7) % 97).mean()
+    assert 0.7 < match < 0.95, match
+
+
+def test_classification_batch_flip():
+    b = classification_batch(0, 32, 8, 10)
+    bf = classification_batch(0, 32, 8, 10, flip_labels=True)
+    np.testing.assert_array_equal(np.asarray(b["x"]), np.asarray(bf["x"]))
+    np.testing.assert_array_equal(np.asarray(9 - b["y"]), np.asarray(bf["y"]))
+
+
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)},
+        "opt": [jnp.ones((4,), jnp.float32)],
+    }
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, tree, step=7, meta={"arch": "x"})
+    restored, step, meta = load_checkpoint(path, tree)
+    assert step == 7 and meta["arch"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype

@@ -1,0 +1,122 @@
+"""Integration: the full BTARD-SGD trainer vs attacks and vs PS baselines —
+the controlled §4.1-style experiment in miniature, plus BTARD-Clipped-SGD
+(Alg. 9) and the Sybil gate (App. F)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
+from repro.core.sybil import SybilGate
+from repro.data import classification_batch, peer_seed
+from repro.optim import sgd
+
+DIM, CLASSES = 16, 4
+
+
+def _setup():
+    def batch_fn(peer, step, flipped):
+        return classification_batch(
+            peer_seed(0, step, peer), 16, DIM, CLASSES, flip_labels=flipped
+        )
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        return -jnp.mean(
+            jnp.take_along_axis(
+                jax.nn.log_softmax(logits), batch["y"][:, None], axis=1
+            )
+        )
+
+    params0 = {
+        "w": jnp.zeros((DIM, CLASSES)),
+        "b": jnp.zeros((CLASSES,)),
+    }
+    eval_batch = classification_batch(10**7, 512, DIM, CLASSES)
+
+    def accuracy(params):
+        logits = eval_batch["x"] @ params["w"] + params["b"]
+        return float((jnp.argmax(logits, 1) == eval_batch["y"]).mean())
+
+    return loss_fn, params0, batch_fn, accuracy
+
+
+@pytest.mark.parametrize("attack", ["sign_flip", "alie", "ipm_06"])
+def test_btard_recovers_under_7_of_16_byzantine(attack):
+    loss_fn, params0, batch_fn, accuracy = _setup()
+    cfg = TrainerConfig(
+        n_peers=16,
+        byzantine=tuple(range(9, 16)),
+        attack=AttackConfig(kind=attack, start_step=5),
+        defense="btard",
+        tau=1.0,
+        m_validators=2,
+        seed=0,
+    )
+    tr = BTARDTrainer(loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9))
+    tr.run(50)
+    acc = accuracy(tr.unraveled_params())
+    assert set(range(9, 16)) <= tr.banned, (attack, tr.banned)
+    assert not (tr.banned - set(range(9, 16)))
+    assert acc > 0.85, (attack, acc)
+
+
+def test_btard_matches_allreduce_without_attack():
+    loss_fn, params0, batch_fn, accuracy = _setup()
+    accs = {}
+    for defense in ["btard", "mean"]:
+        cfg = TrainerConfig(
+            n_peers=8, byzantine=(), defense=defense, tau=2.0, seed=0
+        )
+        tr = BTARDTrainer(loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9))
+        tr.run(40)
+        accs[defense] = accuracy(tr.unraveled_params())
+    assert abs(accs["btard"] - accs["mean"]) < 0.08, accs
+
+
+def test_ps_baselines_fail_where_paper_says():
+    """Plain mean breaks under amplified sign flip (Fig. 3 upper rows)."""
+    loss_fn, params0, batch_fn, accuracy = _setup()
+    cfg = TrainerConfig(
+        n_peers=16,
+        byzantine=tuple(range(9, 16)),
+        attack=AttackConfig(kind="sign_flip", start_step=5),
+        defense="mean",
+        seed=0,
+    )
+    tr = BTARDTrainer(loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9))
+    tr.run(30)
+    assert accuracy(tr.unraveled_params()) < 0.7
+
+
+def test_btard_clipped_sgd_heavy_tails():
+    """Alg. 9: peers clip their own gradients; training still converges."""
+    loss_fn, params0, batch_fn, accuracy = _setup()
+    cfg = TrainerConfig(
+        n_peers=8,
+        byzantine=(6, 7),
+        attack=AttackConfig(kind="sign_flip", start_step=5),
+        defense="btard",
+        tau=1.0,
+        clip_lambda=5.0,
+        m_validators=2,
+        seed=0,
+    )
+    tr = BTARDTrainer(loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9))
+    tr.run(40)
+    assert {6, 7} <= tr.banned
+    assert accuracy(tr.unraveled_params()) > 0.85
+
+
+def test_sybil_gate_blocks_fake_identities():
+    def grad_fn(peer, step, params, flipped=False):
+        k = jax.random.key(peer * 31 + step)
+        return np.asarray(jax.random.normal(k, (8,)), np.float32)
+
+    gate = SybilGate(grad_fn, probation_steps=5, check_prob=0.9, seed=0)
+    gate.request_join(100, 0, dishonest=False)
+    gate.request_join(101, 0, dishonest=True)
+    for t in range(20):
+        admitted, rejected = gate.step(None, t)
+    assert 100 in admitted
+    assert 101 in rejected and 101 not in admitted
