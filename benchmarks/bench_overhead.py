@@ -1,19 +1,39 @@
 """Paper App. I.2: BTARD overhead vs plain All-Reduce.
 
-Two views:
-  * measured step time of the butterfly robust aggregation vs a plain mean
-    over stacked peer gradients, as d grows (CPU timings — relative overhead
-    is the signal);
+Three views:
+  * measured step time of the butterfly robust aggregation + verification
+    tables vs a plain mean over stacked peer gradients, as d grows, for both
+    the pure-jnp pipeline and the fused Pallas kernel (interpret mode on
+    CPU — the interpreter is slow, so the *pass model* is the bandwidth
+    signal there; on a TPU set REPRO_PALLAS_COMPILE=1);
+  * the HBM-pass model: the seed kernel family streamed the (n, d) peer
+    stack 2*n_iters + 1 times per aggregation (norm phase + update phase per
+    clip iteration, then a standalone table pass); the fused kernel's
+    incremental-norm recurrence + verification epilogue does it in
+    n_iters + 2 (see src/repro/kernels/DESIGN.md);
   * the communication model: per-peer bytes for AR vs BTARD
     (2d for ring/butterfly AR; BTARD adds O(n^2) scalars — independent of d,
     exactly the paper's §3.1 cost accounting).
+
+Emits BENCH_overhead.json next to this file so the perf trajectory is
+machine-trackable across PRs.
 """
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timer
-from repro.core.butterfly import butterfly_clip, get_random_directions, verification_tables
+from repro.core.butterfly import (
+    butterfly_clip,
+    butterfly_clip_verified,
+    get_random_directions,
+    verification_tables,
+)
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_overhead.json")
 
 
 def comm_model(n, d, bytes_per=4):
@@ -22,30 +42,91 @@ def comm_model(n, d, bytes_per=4):
     return ar, btard_extra
 
 
+def hbm_pass_model(n_iters, n, d, bytes_per=4):
+    """HBM traffic of the full aggregation workload per robust all-reduce:
+    across all n partitions the streamed stack totals n * d values (each
+    partition is an (n, d/n) peer stack).
+
+    seed two-phase kernel + standalone table kernel: 2*n_iters + 1 passes;
+    fused incremental-norm kernel with verification epilogue: n_iters + 2.
+    """
+    stack = n * d * bytes_per
+    return {
+        "seed_passes": 2 * n_iters + 1,
+        "fused_passes": n_iters + 2,
+        "seed_bytes": (2 * n_iters + 1) * stack,
+        "fused_bytes": (n_iters + 2) * stack,
+        "pass_speedup": (2 * n_iters + 1) / (n_iters + 2),
+    }
+
+
 def main(fast=True):
-    n = 16
+    n, n_iters = 16, 20
     dims = [1 << 14, 1 << 17] if fast else [1 << 14, 1 << 17, 1 << 20, 1 << 23]
+    # interpret-mode pallas is CPU-interpreter-bound; keep its sizes sane
+    fused_dims = [d for d in dims if d <= 1 << 17]
+    records = []
     for d in dims:
         g = jax.random.normal(jax.random.key(0), (n, d))
+        z = get_random_directions(7, n, -(-d // n))
 
         mean_fn = jax.jit(lambda x: x.mean(0))
         us_mean = timer(mean_fn, g, reps=10)
 
         def full_btard(x):
-            agg, parts = butterfly_clip(x, tau=1.0, n_iters=20)
-            z = get_random_directions(7, agg.shape[0], agg.shape[1])
+            agg, parts = butterfly_clip(x, tau=1.0, n_iters=n_iters)
             s, norms = verification_tables(parts, agg, z, 1.0)
             return agg, s, norms
 
         us_btard = timer(jax.jit(full_btard), g, reps=5)
+
+        us_fused = None
+        if d in fused_dims:
+            def fused_btard(x):
+                agg, _parts, s, norms = butterfly_clip_verified(
+                    x, 1.0, z, n_iters=n_iters, use_pallas=True
+                )
+                return agg, s, norms
+
+            us_fused = timer(jax.jit(fused_btard), g, reps=3)
+
         ar, extra = comm_model(n, d)
+        passes = hbm_pass_model(n_iters, n, d)
         emit(
             f"overhead/d={d}",
             us_btard,
             f"mean_us={us_mean:.1f};overhead_x={us_btard/max(us_mean,1e-9):.2f};"
+            f"fused_us={-1.0 if us_fused is None else us_fused:.1f};"
+            f"passes_seed={passes['seed_passes']};passes_fused={passes['fused_passes']};"
+            f"pass_speedup={passes['pass_speedup']:.2f};"
             f"comm_ar_bytes={ar};comm_btard_extra_bytes={extra};"
             f"extra_frac={extra/ar:.4f}",
         )
+        records.append(
+            {
+                "d": d,
+                "n_peers": n,
+                "n_iters": n_iters,
+                "mean_us": us_mean,
+                "btard_jnp_us": us_btard,
+                "btard_fused_interpret_us": us_fused,
+                "overhead_x": us_btard / max(us_mean, 1e-9),
+                "hbm_pass_model": passes,
+                "comm_ar_bytes": ar,
+                "comm_btard_extra_bytes": extra,
+            }
+        )
+    payload = {
+        "bench": "overhead",
+        "backend": jax.default_backend(),
+        "pallas_mode": "interpret"
+        if os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+        else "compiled",
+        "records": records,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {JSON_PATH}", flush=True)
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ class TrainerConfig:
     delta_max: float | None = None
     clip_lambda: float | None = None  # enables BTARD-Clipped-SGD
     seed: int = 0
+    use_pallas: bool = False  # fused aggregation+tables kernel (DESIGN.md)
 
 
 class BTARDTrainer:
@@ -65,6 +66,7 @@ class BTARDTrainer:
             delta_max=cfg.delta_max,
             clip_lambda=cfg.clip_lambda,
             seed=cfg.seed,
+            use_pallas=cfg.use_pallas,
         )
         self.history: list = []
         self._step = 0

@@ -16,6 +16,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.centered_clip import centered_clip, clip_residuals
 
@@ -62,6 +63,38 @@ def butterfly_clip(grads, tau, n_iters: int = 50, weights=None, use_pallas=False
     return agg, parts
 
 
+def butterfly_clip_verified(
+    grads, tau, z, n_iters: int = 50, weights=None, use_pallas=False
+):
+    """ButterflyClip aggregation AND the Alg. 6 broadcast tables together.
+
+    grads: (n, d); z: (n_parts, part) unit directions (from the MPRNG seed).
+    Returns (agg_parts (n_parts, part), parts (n, n_parts, part),
+    s (n, n_parts), norms (n, n_parts)).
+
+    use_pallas routes through the fused one-pass-per-iteration kernel
+    (kernels/centered_clip.butterfly_clip_fused_pallas): the whole robust
+    aggregation plus tables costs n_iters + 2 HBM passes of the stacked
+    partitions instead of 2*n_iters + 1 (see kernels/DESIGN.md).
+    """
+    n = grads.shape[0]
+    parts = split_parts(grads, n)
+    stacked = jnp.swapaxes(parts, 0, 1)  # (n_parts, n, part)
+
+    if use_pallas:
+        from repro.kernels.ops import butterfly_clip_fused_op
+
+        agg, s, norms = butterfly_clip_fused_op(
+            stacked, tau, z, weights, n_iters=n_iters
+        )
+        return agg, parts, s, norms
+
+    clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
+    agg = jax.vmap(lambda xs: clip(xs))(stacked)
+    s, norms = verification_tables(parts, agg, z, tau)
+    return agg, parts, s, norms
+
+
 def get_random_directions(seed, n_parts: int, part: int):
     """z[j] — unit vector per partition from the MPRNG seed (Alg. 1 L5).
 
@@ -73,11 +106,19 @@ def get_random_directions(seed, n_parts: int, part: int):
     return z / jnp.maximum(jnp.linalg.norm(z, axis=1, keepdims=True), 1e-30)
 
 
-def verification_tables(parts, agg, z, tau):
+def verification_tables(parts, agg, z, tau, use_pallas=False):
     """Broadcast tables of Alg. 6: s[i, j] = <z[j], Delta_i^j>, norm[i, j].
 
     parts: (n, n_parts, part); agg: (n_parts, part); z: (n_parts, part).
+    use_pallas: single-HBM-pass batched kernel instead of the vmapped jnp
+    path (used standalone when agg changed after the fused aggregation,
+    e.g. recomputing tables against a corrupted aggregate).
     """
+    if use_pallas:
+        from repro.kernels.ops import verify_tables_all_op
+
+        return verify_tables_all_op(jnp.swapaxes(parts, 0, 1), agg, z, tau)
+
     def per_part(xs_j, v_j, z_j):
         deltas = clip_residuals(xs_j, v_j, tau)  # (n, part)
         s_j = deltas.astype(jnp.float32) @ z_j.astype(jnp.float32)
@@ -107,6 +148,18 @@ def delta_max_votes(norms, weights, delta_max):
         check = check & (weights[:, None] > 0)
     votes = check.sum(0)
     return votes, votes > active / 2.0
+
+
+def checksum_offender_peers(checksums, rel: float = 1e-2):
+    """Map violated Verification-2 checksums to aggregator peer ids.
+
+    Partition j is aggregated by peer j in the butterfly topology (Alg. 2),
+    so |sum_i s_i^j| above tolerance implicates peer j. The tolerance scales
+    with the mean checksum magnitude (the fixed point is solved to finite
+    precision). Returns a np.ndarray of offending peer indices.
+    """
+    cs = np.abs(np.asarray(checksums, np.float32))
+    return np.nonzero(cs > rel * (1.0 + cs.mean()))[0]
 
 
 def checksum_tolerance(agg, parts, rel=1e-3):

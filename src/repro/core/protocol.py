@@ -13,6 +13,7 @@ consistent broadcast channel.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 from dataclasses import dataclass, field
 
@@ -77,6 +78,7 @@ class BTARDProtocol:
         delta_max: float | None = None,
         clip_lambda: float | None = None,  # BTARD-Clipped-SGD peer-side clip
         seed: int = 0,
+        use_pallas: bool = False,
     ):
         self.n = n_peers
         self.d = d
@@ -88,6 +90,7 @@ class BTARDProtocol:
         self.m = m_validators
         self.delta_max = delta_max
         self.clip_lambda = clip_lambda
+        self.use_pallas = use_pallas
         self.rng = np.random.default_rng(seed)
         self.banned: set = set()
         self.validators: list = []  # C_k — chosen at the END of step k-1
@@ -97,7 +100,17 @@ class BTARDProtocol:
                 g, tau=self.tau, n_iters=self.clip_iters, weights=w
             )
         )
-        self._jit_tables = jax.jit(bf.verification_tables, static_argnums=())
+        self._jit_tables = jax.jit(
+            functools.partial(bf.verification_tables, use_pallas=use_pallas)
+        )
+        # fused path: aggregation + broadcast tables in ONE kernel launch of
+        # n_iters + 2 HBM passes (vs the two jitted calls above)
+        self._jit_fused = jax.jit(
+            lambda g, z, w: bf.butterfly_clip_verified(
+                g, tau=self.tau, z=z, n_iters=self.clip_iters, weights=w,
+                use_pallas=True,
+            )
+        )
 
     # ------------------------------------------------------------------
     def active_peers(self):
@@ -168,6 +181,46 @@ class BTARDProtocol:
         return G, honest_G
 
     # ------------------------------------------------------------------
+    def _mprng_phase(self, t, active, info):
+        """MPRNG commit/reveal for the shared seed; bans aborters."""
+        peers = [MPRNGPeer(i) for i in active]
+        if self.attack.mprng_abort and self._is_attacking(t):
+            from repro.core.mprng import AbortingPeer
+
+            peers = [
+                AbortingPeer(i) if i in self.byzantine else MPRNGPeer(i)
+                for i in active
+            ]
+        seed, mprng_banned, _ = run_mprng(peers, self.rng)
+        for i in mprng_banned:
+            self._ban(i, info, "mprng abort/mismatch")
+        info.seed = seed % (2**31)
+
+    def _aggregator_attack(self, t, active, agg):
+        """Byzantine aggregators corrupt their partitions in place. Returns
+        the list of corrupted partition indices."""
+        corrupted_parts = []
+        if self._is_attacking(t) and self.attack.aggregator_attack:
+            for j_idx, j in enumerate(active):
+                if j in self.byzantine and self.attack.aggregator_scale > 0:
+                    noise = self.rng.normal(size=agg.shape[1]).astype(np.float32)
+                    noise /= max(np.linalg.norm(noise), 1e-30)
+                    agg[j_idx] = agg[j_idx] + self.attack.aggregator_scale * noise
+                    corrupted_parts.append(j_idx)
+        return corrupted_parts
+
+    def _corrupt_and_hash(self, t, active, agg, parts):
+        """Shared post-aggregation sequence of both paths: writable copies,
+        the aggregator attack, then the broadcast hashes of the (possibly
+        corrupted) aggregation results."""
+        agg = np.array(agg)  # writable copy
+        parts_np = np.asarray(parts)
+        honest_agg = agg.copy()
+        corrupted_parts = self._aggregator_attack(t, active, agg)
+        agg_hashes = {active[j]: grad_hash(agg[j]) for j in range(len(active))}
+        return agg, parts_np, honest_agg, corrupted_parts, agg_hashes
+
+    # ------------------------------------------------------------------
     def step(self, params, t):
         """One BTARD-SGD aggregation round. Returns (g_hat (d,), StepInfo)."""
         info = StepInfo(step=t)
@@ -194,45 +247,51 @@ class BTARDProtocol:
         # ---- commitments (broadcast BEFORE any aggregation data flows) ----
         commitments = {i: grad_hash(G[idx]) for idx, i in enumerate(active)}
 
-        # ---- butterfly exchange + per-partition CenteredClip ---------------
-        agg, parts = self._jit_bclip(jnp.asarray(G), jnp.asarray(weights))
-        agg = np.array(agg)  # writable copy
-        parts_np = np.asarray(parts)
-        honest_agg = agg.copy()
+        if self.use_pallas:
+            # Fused path (kernels/DESIGN.md): the MPRNG commit/reveal runs
+            # first so z is available to the fused kernel, which then emits
+            # the aggregate AND the broadcast tables from one pallas_call of
+            # n_iters + 2 HBM passes. On the wire z is revealed only after
+            # the aggregate hashes are committed; the simulated attackers are
+            # scripted and never adapt to z, and the MPRNG output does not
+            # depend on the aggregate, so the reorder is behaviorally
+            # identical (the host rng draw order differs from the two-call
+            # path only when aggregator_attack also draws from it).
+            self._mprng_phase(t, active, info)
+            part = bf.pad_to_parts(self.d, n_act) // n_act
+            z = np.asarray(bf.get_random_directions(info.seed, n_act, part))
+            agg, parts, s_tbl, norm_tbl = self._jit_fused(
+                jnp.asarray(G), jnp.asarray(z), jnp.asarray(weights)
+            )
+            agg, parts_np, honest_agg, corrupted_parts, agg_hashes = (
+                self._corrupt_and_hash(t, active, agg, parts)
+            )
+            if corrupted_parts:
+                # honest peers received the CORRUPTED aggregate, so their
+                # reported tables are computed against it — one standalone
+                # table pass, paid only on attacked steps
+                s_tbl, norm_tbl = self._jit_tables(
+                    jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z),
+                    self.tau,
+                )
+        else:
+            # ---- butterfly exchange + per-partition CenteredClip, then the
+            # hash of aggregation results, broadcast BEFORE z is known ------
+            agg, parts = self._jit_bclip(jnp.asarray(G), jnp.asarray(weights))
+            agg, parts_np, honest_agg, corrupted_parts, agg_hashes = (
+                self._corrupt_and_hash(t, active, agg, parts)
+            )
 
-        # aggregation attack: byzantine aggregators corrupt their partitions
-        corrupted_parts = []
-        if self._is_attacking(t) and self.attack.aggregator_attack:
-            for j_idx, j in enumerate(active):
-                if j in self.byzantine and self.attack.aggregator_scale > 0:
-                    noise = self.rng.normal(size=agg.shape[1]).astype(np.float32)
-                    noise /= max(np.linalg.norm(noise), 1e-30)
-                    agg[j_idx] = agg[j_idx] + self.attack.aggregator_scale * noise
-                    corrupted_parts.append(j_idx)
+            # ---- MPRNG: shared seed (commit/reveal) ------------------------
+            self._mprng_phase(t, active, info)
+            z = np.asarray(
+                bf.get_random_directions(info.seed, agg.shape[0], agg.shape[1])
+            )
 
-        # ---- hash of aggregation results broadcast BEFORE z is known -------
-        agg_hashes = {active[j]: grad_hash(agg[j]) for j in range(n_act)}
-
-        # ---- MPRNG: shared seed (commit/reveal) ----------------------------
-        peers = [MPRNGPeer(i) for i in active]
-        if self.attack.mprng_abort and self._is_attacking(t):
-            from repro.core.mprng import AbortingPeer
-
-            peers = [
-                AbortingPeer(i) if i in self.byzantine else MPRNGPeer(i)
-                for i in active
-            ]
-        seed, mprng_banned, _ = run_mprng(peers, self.rng)
-        for i in mprng_banned:
-            self._ban(i, info, "mprng abort/mismatch")
-        info.seed = seed % (2**31)
-
-        z = np.asarray(bf.get_random_directions(info.seed, agg.shape[0], agg.shape[1]))
-
-        # ---- broadcast tables s_i^j, norm_ij --------------------------------
-        s_tbl, norm_tbl = self._jit_tables(
-            jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z), self.tau
-        )
+            # ---- broadcast tables s_i^j, norm_ij ---------------------------
+            s_tbl, norm_tbl = self._jit_tables(
+                jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z), self.tau
+            )
         s_tbl = np.asarray(s_tbl).copy()  # (n_act, n_parts)
         norm_tbl = np.asarray(norm_tbl).copy()
         true_s = s_tbl.copy()

@@ -3,21 +3,34 @@
 The CenteredClip fixed point is a bandwidth-bound reduction over the stacked
 peer partitions (n_peers x part). The naive jnp version materializes
 ``diff``, ``norms`` and the weighted sum as separate HBM temporaries every
-iteration (~4 passes); these kernels keep the working tile resident in VMEM
-and stream x once per phase:
+iteration (~4 passes). The fused kernel family streams x through VMEM ONE
+time per clip iteration — see DESIGN.md for the full derivation:
 
-* ``centered_clip_kernel`` — grid (n_iters, 2, n_blocks); phase 0 accumulates
-  per-peer squared norms into a VMEM scratch, phase 1 converts them to clip
-  weights and updates v in place (input/output aliased). 2 HBM passes of x
-  per iteration, zero temporaries.
+* ``_fused_body`` (via ``centered_clip_fused_pallas`` and the batched
+  ``butterfly_clip_fused_pallas``) — grid (n_iters + 2, n_blocks):
+  pass 0 is a norm prologue (||x_i - v_0||^2 into a VMEM scratch), passes
+  1..n_iters update v while accumulating the NEXT iteration's per-peer
+  squared norms incrementally (||x_i - v_{l+1}||^2 = sum_b ||diff_b -
+  upd_b||^2 — diff and upd are already in registers, so the separate norm
+  phase of the legacy kernel disappears), and pass n_iters+1 is a fused
+  verification epilogue producing the Alg. 6 broadcast tables
+  s_i = min(1, tau/||x_i - v||) <z, x_i - v> and ||x_i - v|| for free
+  (the final squared norms are still sitting in the scratch).
+  Total: n_iters + 2 HBM passes of x vs 2*n_iters + 1 for the legacy
+  two-phase kernel + separate table kernel.
+
+* ``centered_clip_kernel`` (legacy, kept as a cross-check) — grid
+  (n_iters, 2, n_blocks); phase 0 accumulates per-peer squared norms,
+  phase 1 converts them to clip weights and updates v in place. 2 HBM
+  passes of x per iteration.
 
 * ``verify_tables_kernel`` — ONE pass of x producing both Verification-1/2
-  tables: per-peer <z, x_i - v> and ||x_i - v|| accumulate together, the clip
-  weight is applied in the epilogue on the last block.
+  tables standalone (used when the aggregate was corrupted after the fused
+  call and the tables must be recomputed against the corrupted v).
 
 Block geometry: peers stay un-tiled (n <= ~64 on the peer axis), the
 partition dim is tiled by ``block`` (lane-aligned multiples of 128). Inputs
-are zero-padded to a block multiple — zero columns where x == v == 0
+are zero-padded to a block multiple — zero columns where x == v == z == 0
 contribute nothing to norms, dots, or updates, so padding is exact.
 Validated on CPU with interpret=True against kernels/ref.py.
 """
@@ -196,6 +209,207 @@ def butterfly_clip_pallas(
 
 
 # ===========================================================================
+# Fused one-pass-per-iteration CenteredClip with incremental norms and a
+# verification epilogue. Grid (n_iters + 2, n_blocks) (a leading n_parts
+# axis in the batched variant):
+#
+#   pass 0            prologue: v := v0, sq_i := ||x_i - v0||^2
+#   pass 1..n_iters   at blk 0 convert sq -> clip weights, zero sq; then per
+#                     block: upd = sum_i cw_i (x_i - v) / wsum, v += upd, and
+#                     sq_i += ||diff_i - upd||^2 — the NEXT iteration's
+#                     squared norms, accumulated from values already in
+#                     registers (no second read of x).
+#   pass n_iters+1    epilogue: dot_i = <z, x_i - v>; on the last block emit
+#                     s_i = min(1, tau_v/||x_i - v||) dot_i and ||x_i - v||
+#                     (sq still holds the final squared norms).
+#
+# n_iters + 2 HBM passes of x total, vs 2*n_iters + 1 for the legacy
+# two-phase kernel plus the standalone table kernel.
+# ===========================================================================
+def _fused_body(
+    batched, taus_ref, tauv_ref, w_ref, xs_ref, v_ref, z_ref,
+    out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref,
+):
+    off = 1 if batched else 0
+    it = pl.program_id(off + 0)
+    blk = pl.program_id(off + 1)
+    n_upd = pl.num_programs(off + 0) - 2
+    nb = pl.num_programs(off + 1)
+    xs = (xs_ref[0] if batched else xs_ref[...]).astype(jnp.float32)
+
+    @pl.when(it == 0)
+    def _prologue():
+        out_ref[...] = v_ref[...].astype(jnp.float32)
+
+        @pl.when(blk == 0)
+        def _reset():
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        diff = xs - out_ref[...]
+        sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(jnp.logical_and(it >= 1, it <= n_upd))
+    def _update():
+        @pl.when(blk == 0)
+        def _weights():
+            tau = taus_ref[0, 0]
+            norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
+            cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+            cw = jnp.where(jnp.isinf(tau), 1.0, cw)
+            cw_ref[...] = cw * w_ref[...].astype(jnp.float32)
+            sq_ref[...] = jnp.zeros_like(sq_ref)  # accumulates iter l+1 norms
+
+        wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
+        diff = xs - out_ref[...]
+        upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
+        out_ref[...] = out_ref[...] + upd
+        nd = diff - upd  # x_i - v_{l+1} restricted to this block
+        sq_ref[...] += jnp.sum(nd * nd, axis=1, keepdims=True)
+
+    @pl.when(it == n_upd + 1)
+    def _epilogue():
+        @pl.when(blk == 0)
+        def _reset_dot():
+            dot_ref[...] = jnp.zeros_like(dot_ref)
+
+        diff = xs - out_ref[...]
+        dot_ref[...] += jnp.sum(diff * z_ref[...].astype(jnp.float32),
+                                axis=1, keepdims=True)
+
+        @pl.when(blk == nb - 1)
+        def _tables():
+            tau_v = tauv_ref[0, 0]
+            norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
+            cwv = jnp.minimum(1.0, tau_v / jnp.maximum(norms, 1e-30))
+            cwv = jnp.where(jnp.isinf(tau_v), 1.0, cwv)
+            s_ref[...] = (cwv * dot_ref[...]).reshape(s_ref.shape)
+            norm_ref[...] = norms.reshape(norm_ref.shape)
+
+
+def _pad_taus(taus, n_iters):
+    """(n_iters,) -> (n_iters + 2, 1) so the grid's pass index maps straight
+    into the schedule (rows 0 / n_iters+1 are never read)."""
+    t = taus.astype(jnp.float32).reshape(n_iters, 1)
+    return jnp.concatenate([t[:1], t, t[-1:]], axis=0)
+
+
+def centered_clip_fused_pallas(
+    xs, taus, z, tau_v=None, weights=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """Fused CenteredClip + verification tables in n_iters + 2 passes of x.
+
+    xs: (n, d); taus: (n_iters,); z: (d,) unit direction for the epilogue.
+    tau_v defaults to taus[-1] (the protocol uses a constant schedule).
+    Returns (v (d,), s (n,), norms (n,)) f32.
+    """
+    n, d = xs.shape
+    n_iters = int(taus.shape[0])
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if tau_v is None:
+        tau_v = taus[-1]
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        xs = jnp.pad(xs, ((0, 0), (0, dp - d)))
+        z = jnp.pad(z, (0, dp - d))
+    n_blocks = dp // blk
+
+    tauv2 = jnp.asarray(tau_v, jnp.float32).reshape(1, 1)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    v0 = jnp.zeros((1, dp), jnp.float32)
+
+    out, s, norms = pl.pallas_call(
+        functools.partial(_fused_body, False),
+        grid=(n_iters + 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, b: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i, b: (0, 0)),
+            pl.BlockSpec((n, blk), lambda i, b: (0, b)),
+            pl.BlockSpec((1, blk), lambda i, b: (0, b)),
+            pl.BlockSpec((1, blk), lambda i, b: (0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk), lambda i, b: (0, b)),
+            pl.BlockSpec((n, 1), lambda i, b: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i, b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(_pad_taus(taus, n_iters), tauv2, w2, xs, v0, z.reshape(1, dp))
+    return out[0, :d], s[:, 0], norms[:, 0]
+
+
+def butterfly_clip_fused_pallas(
+    parts, taus, z, tau_v=None, weights=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """All-partition fused ButterflyClip: the whole robust aggregation AND
+    the Alg. 6 broadcast tables in ONE pallas_call of n_iters + 2 passes.
+
+    parts: (n_parts, n_peers, part); z: (n_parts, part).
+    Returns (agg (n_parts, part), s (n_parts, n), norms (n_parts, n)) f32.
+    """
+    n_parts, n, d = parts.shape
+    n_iters = int(taus.shape[0])
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if tau_v is None:
+        tau_v = taus[-1]
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    tauv2 = jnp.asarray(tau_v, jnp.float32).reshape(1, 1)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    v0 = jnp.zeros((n_parts, dp), jnp.float32)
+
+    out, s, norms = pl.pallas_call(
+        functools.partial(_fused_body, True),
+        grid=(n_parts, n_iters + 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda p, i, b: (i, 0)),
+            pl.BlockSpec((1, 1), lambda p, i, b: (0, 0)),
+            pl.BlockSpec((n, 1), lambda p, i, b: (0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
+            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
+            pl.BlockSpec((1, n), lambda p, i, b: (p, 0)),
+            pl.BlockSpec((1, n), lambda p, i, b: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(_pad_taus(taus, n_iters), tauv2, w2, parts, v0, z)
+    return out[:, :d], s, norms
+
+
+# ===========================================================================
 # Fused verification-tables kernel (single HBM pass)
 # ===========================================================================
 def _vt_kernel(tau_ref, xs_ref, v_ref, z_ref, s_ref, norm_ref, dot_ref, sq_ref):
@@ -263,3 +477,75 @@ def verify_tables_pallas(
         interpret=interpret,
     )(tau2, xs, v.reshape(1, dp), z.reshape(1, dp))
     return s[:, 0], norms[:, 0]
+
+
+def _vt_batched_kernel(
+    tau_ref, xs_ref, v_ref, z_ref, s_ref, norm_ref, dot_ref, sq_ref
+):
+    """Grid (n_parts, n_blocks) — verify_tables for every partition in one
+    pallas_call (the recompute path when the aggregate changed after the
+    fused kernel ran, e.g. a corrupted aggregator)."""
+    blk = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _reset():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    diff = xs_ref[0].astype(jnp.float32) - v_ref[...].astype(jnp.float32)
+    zb = z_ref[...].astype(jnp.float32)
+    dot_ref[...] += jnp.sum(diff * zb, axis=1, keepdims=True)
+    sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(blk == nb - 1)
+    def _epilogue():
+        tau = tau_ref[0, 0]
+        norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
+        cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        s_ref[...] = (cw * dot_ref[...]).reshape(s_ref.shape)
+        norm_ref[...] = norms.reshape(norm_ref.shape)
+
+
+def verify_tables_batched_pallas(
+    parts, agg, z, tau, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """All-partition verification tables in one pass of the stacked parts.
+
+    parts: (n_parts, n, part); agg, z: (n_parts, part).
+    Returns (s (n_parts, n), norms (n_parts, n)).
+    """
+    n_parts, n, d = parts.shape
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        agg = jnp.pad(agg, ((0, 0), (0, dp - d)))
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    tau2 = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    s, norms = pl.pallas_call(
+        _vt_batched_kernel,
+        grid=(n_parts, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, blk), lambda p, b: (p, b)),
+            pl.BlockSpec((1, blk), lambda p, b: (p, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda p, b: (p, 0)),
+            pl.BlockSpec((1, n), lambda p, b: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tau2, parts, agg, z)
+    return s, norms

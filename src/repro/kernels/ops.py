@@ -37,3 +37,46 @@ def butterfly_clip_op(parts, tau, weights=None, *, n_iters: int = 20, block: int
     parts (n_parts, n_peers, part) -> (n_parts, part)."""
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
     return _k.butterfly_clip_pallas(parts, taus, weights, block=block, interpret=_INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# Fused one-pass-per-iteration family: aggregation + verification tables in
+# n_iters + 2 HBM passes of x (vs 2*n_iters + 1 for the two-call pipeline).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def centered_clip_fused_op(
+    xs, tau, z, weights=None, tau_v=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+):
+    """Fused CenteredClip + Alg. 6 tables: xs (n, d), z (d,) ->
+    (agg (d,), s (n,), norms (n,))."""
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    return _k.centered_clip_fused_pallas(
+        xs, taus, z, tau_v=tau_v, weights=weights, block=block, interpret=_INTERPRET
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def butterfly_clip_fused_op(
+    parts, tau, z, weights=None, tau_v=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+):
+    """Fused all-partition ButterflyClip aggregation + broadcast tables:
+    parts (n_parts, n_peers, part), z (n_parts, part) ->
+    (agg (n_parts, part), s (n_peers, n_parts), norms (n_peers, n_parts)).
+
+    s/norms come back transposed to the (peer, partition) layout of
+    core.butterfly.verification_tables."""
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    agg, s, norms = _k.butterfly_clip_fused_pallas(
+        parts, taus, z, tau_v=tau_v, weights=weights, block=block, interpret=_INTERPRET
+    )
+    return agg, s.T, norms.T
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def verify_tables_all_op(parts, agg, z, tau, *, block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed all-partition verification tables (one pass of parts):
+    -> (s (n_peers, n_parts), norms (n_peers, n_parts))."""
+    s, norms = _k.verify_tables_batched_pallas(
+        parts, agg, z, tau, block=block, interpret=_INTERPRET
+    )
+    return s.T, norms.T

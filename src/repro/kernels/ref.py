@@ -25,6 +25,45 @@ def centered_clip_ref(xs, taus, weights=None, v0=None):
     return v
 
 
+def centered_clip_fused_ref(xs, taus, z, tau_v=None, weights=None):
+    """Reference for the fused kernel's incremental-norm recurrence.
+
+    Tracks the per-peer squared norms through the EXPANDED recurrence
+        sq_{l+1,i} = sq_{l,i} - 2 <x_i - v_l, upd> + ||upd||^2
+    (the algebraic form of sum_b ||diff_b - upd_b||^2) instead of ever
+    recomputing ||x_i - v|| from x — so it validates the recurrence with a
+    different floating-point evaluation order than both the kernel (per-block
+    direct sums) and the plain jnp path (full-vector norms).
+
+    xs: (n, d); taus: (n_iters,); z: (d,). Returns (v (d,), s (n,),
+    norms (n,)) f32, matching centered_clip_fused_pallas.
+    """
+    xs = xs.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    n, d = xs.shape
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wsum = jnp.maximum(w.sum(), 1e-30)
+    if tau_v is None:
+        tau_v = taus[-1]
+    v = jnp.zeros((d,), jnp.float32)
+    sq = jnp.sum(xs * xs, axis=1)  # prologue: ||x_i - v_0||^2 with v_0 = 0
+    for tau in taus:
+        norms = jnp.sqrt(jnp.maximum(sq, 1e-30))
+        cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        cw = jnp.where(jnp.isinf(tau), 1.0, cw) * w
+        diff = xs - v[None, :]
+        upd = (cw[:, None] * diff).sum(0) / wsum
+        v = v + upd
+        sq = jnp.maximum(sq - 2.0 * (diff @ upd) + upd @ upd, 0.0)
+    # verification epilogue: one more look at x for the z-dots; norms come
+    # from the recurrence state
+    norms = jnp.sqrt(sq)
+    dots = (xs - v[None, :]) @ z
+    cwv = jnp.minimum(1.0, jnp.float32(tau_v) / jnp.maximum(norms, 1e-30))
+    cwv = jnp.where(jnp.isinf(jnp.float32(tau_v)), 1.0, cwv)
+    return v, cwv * dots, norms
+
+
 def verify_tables_ref(xs, v, z, tau):
     """Reference fused verification scalars.
 

@@ -38,6 +38,24 @@ def _named(mesh, spec_tree):
     )
 
 
+def _shard_map(f, mesh, in_specs, out_specs, axis_names, check_vma=False):
+    """jax.shard_map with a fallback to the pre-0.5 experimental API, where
+    the manual-axes set is expressed as its complement (``auto``) and
+    check_vma was called check_rep."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(axis_names), check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma, auto=auto,
+    )
+
+
 def opt_state_specs(opt_state_abs, pspecs):
     """Optimizer state mirrors the param tree per moment buffer."""
 
@@ -130,23 +148,28 @@ def butterfly_stage(
     recv = jax.lax.all_to_all(x, peer_axes, split_axis=0, concat_axis=0, tiled=True)
     recv = jax.lax.optimization_barrier(recv)
 
-    if use_pallas:
-        from repro.kernels.centered_clip import centered_clip_pallas
-
-        taus = jnp.full((clip_iters,), tau, jnp.float32)
-        agg = centered_clip_pallas(recv, taus, weights)
-    else:
-        agg = centered_clip(recv, tau=tau, n_iters=clip_iters, weights=weights)
-    agg = agg.astype(jnp.float32)
-
-    # --- verification tables (Alg. 6): z derived from the shared MPRNG seed,
-    # folded by partition owner index; commitments are host-side (protocol).
+    # --- z for the verification tables (Alg. 6): derived from the shared
+    # MPRNG seed, folded by partition owner index; commitments are host-side
+    # (protocol). Known before the aggregation runs, so the fused kernel can
+    # emit the tables from its epilogue pass.
     my_idx = jax.lax.axis_index(peer_axes)
     z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), my_idx), (part,))
     z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
-    deltas = clip_residuals(recv.astype(jnp.float32), agg, tau)
-    s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
-    norms_local = jnp.linalg.norm(recv.astype(jnp.float32) - agg[None], axis=1)
+
+    if use_pallas:
+        from repro.kernels.ops import centered_clip_fused_op
+
+        # fused one-pass-per-iteration kernel: aggregate + s_i = <z, Delta_i>
+        # + ||x_i - v|| in n_iters + 2 HBM passes of the peer stack
+        agg, s_local, norms_local = centered_clip_fused_op(
+            recv, tau, z.astype(jnp.float32), weights, n_iters=clip_iters
+        )
+    else:
+        agg = centered_clip(recv, tau=tau, n_iters=clip_iters, weights=weights)
+        agg = agg.astype(jnp.float32)
+        deltas = clip_residuals(recv.astype(jnp.float32), agg, tau)
+        s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
+        norms_local = jnp.linalg.norm(recv.astype(jnp.float32) - agg[None], axis=1)
 
     checksum = jnp.abs((s_local * weights).sum())
     votes = ((norms_local > delta_max) * weights).sum() if delta_max is not None else jnp.zeros(())
@@ -253,7 +276,7 @@ def make_btard_train_step(
             set_manual_axes(())
         return loss[None], jax.tree.map(lambda g: g[None], grads)
 
-    stage1 = jax.shard_map(
+    stage1 = _shard_map(
         peer_grads,
         mesh=mesh,
         in_specs=(jax.tree.map(lambda s: P(), pspecs, is_leaf=_is_p), _peer_lead(bspecs, peer_axes)),
@@ -281,7 +304,7 @@ def make_btard_train_step(
     manual_pspecs = jax.tree.map(
         lambda s: P(peer_axes, *s), pspecs, is_leaf=_is_p
     )
-    stage2 = jax.shard_map(
+    stage2 = _shard_map(
         butterfly_all,
         mesh=mesh,
         in_specs=(manual_pspecs, P(), P(), P(), P()),

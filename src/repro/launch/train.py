@@ -50,6 +50,7 @@ def main():
 
     from repro.checkpoint import save_checkpoint
     from repro.configs.base import InputShape
+    from repro.core import butterfly as bf
     from repro.data import TokenPipeline
     from repro.launch.steps import make_baseline_train_step, make_btard_train_step
     from repro.models import get_model
@@ -89,7 +90,9 @@ def main():
     byz_mask = jnp.asarray(
         [1.0 if i in byz else 0.0 for i in range(n_peers)], jnp.float32
     )
-    weights = 1.0 - byz_mask * 0  # all active; bans flow from verification
+    # every peer starts active — even the Byzantine ones; bans flow from the
+    # verification checksums below, never from out-of-band knowledge
+    weights = jnp.ones((n_peers,), jnp.float32)
 
     print(f"arch={model.cfg.name} params={model.param_count():,} "
           f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)}")
@@ -103,13 +106,12 @@ def main():
             )
             extra = (f" checksum={float(metrics['checksum_max']):.2e}"
                      f" votes={float(metrics['votes_max']):.0f}")
-            # host-side ban policy: a partition checksum violation flags the
-            # aggregating peer; Delta_max majority triggers CHECKAVERAGING
-            cs = np.asarray(verif["checksum"])
-            bad = np.nonzero(cs > 1e-2 * (1.0 + np.abs(cs).mean()))[0]
+            # host-side ban policy: a violated partition checksum implicates
+            # its aggregating peer (partition j <-> peer j in the butterfly)
+            bad = bf.checksum_offender_peers(verif["checksum"])
             if len(bad) and args.attack != "none":
                 for b in bad:
-                    weights = weights.at[b].set(0.0)
+                    weights = weights.at[int(b)].set(0.0)
         else:
             params, opt_state, metrics = step_fn(
                 params, opt_state, batch, jnp.int32(step)

@@ -1,0 +1,183 @@
+"""Property tests for the fused one-pass-per-iteration ButterflyClip kernel:
+the incremental-norm recurrence + verification epilogue must agree with BOTH
+kernels/ref.py (expanded recurrence) and the pure-jnp centered_clip +
+verification_tables path, over ragged shapes, tau extremes and banned peers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import butterfly as bf
+from repro.core.centered_clip import centered_clip
+from repro.kernels.ops import (
+    butterfly_clip_fused_op,
+    centered_clip_fused_op,
+    verify_tables_all_op,
+)
+from repro.kernels.ref import (
+    centered_clip_fused_ref,
+    centered_clip_ref,
+    verify_tables_ref,
+)
+
+TAUS = [0.1, 1.0, np.inf]
+# d both lane/block-aligned and ragged — padding must be exact
+SHAPES = [(4, 128), (8, 512), (16, 1000), (32, 2048), (5, 130), (9, 1025)]
+
+
+def _mask(n, banned):
+    return jnp.where(jnp.arange(n) % 3 == 0, 0.0, 1.0) if banned else None
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("tau", TAUS)
+@pytest.mark.parametrize("banned", [False, True])
+def test_fused_matches_ref_and_jnp(shape, tau, banned):
+    n, d = shape
+    xs = jax.random.normal(jax.random.key(n * d + 1), (n, d)) * 2 + 0.25
+    z = jax.random.normal(jax.random.key(3), (d,))
+    z = z / jnp.linalg.norm(z)
+    w = _mask(n, banned)
+    n_iters = 12
+    taus = jnp.full((n_iters,), tau, jnp.float32)
+
+    agg, s, norms = centered_clip_fused_op(xs, tau, z, w, n_iters=n_iters)
+
+    # oracle 1: the expanded incremental-norm recurrence
+    v_r, s_r, n_r = centered_clip_fused_ref(xs, taus, z, weights=w)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(v_r), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(n_r), atol=1e-5, rtol=1e-5)
+
+    # oracle 2: the plain jnp two-phase path (direct norms every iteration)
+    v_j = centered_clip(xs, tau, n_iters=n_iters, weights=w)
+    s_j, n_j = verify_tables_ref(xs, v_j, z, tau)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(v_j), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_j), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(n_j), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 32),
+    d=st.integers(2, 2100),
+    tau=st.sampled_from([0.1, 0.7, 1.0, 4.0, float("inf")]),
+    iters=st.integers(1, 25),
+    banned=st.booleans(),
+    seed=st.integers(0, 99999),
+)
+def test_property_fused_recurrence(n, d, tau, iters, banned, seed):
+    xs = jax.random.normal(jax.random.key(seed), (n, d)) * 2
+    z = jax.random.normal(jax.random.key(seed + 1), (d,))
+    z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
+    w = _mask(n, banned)
+    agg, s, norms = centered_clip_fused_op(xs, tau, z, w, n_iters=iters)
+    v_r, s_r, n_r = centered_clip_fused_ref(
+        xs, jnp.full((iters,), tau, jnp.float32), z, weights=w
+    )
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(v_r), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(n_r), atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    d=st.integers(2, 1500),
+    blk=st.sampled_from([128, 256, 512, 1024]),
+    seed=st.integers(0, 99999),
+)
+def test_property_fused_block_size_invariance(n, d, blk, seed):
+    """Output must not depend on the VMEM block geometry (padding exactness +
+    per-block accumulation order)."""
+    xs = jax.random.normal(jax.random.key(seed), (n, d))
+    z = jax.random.normal(jax.random.key(seed + 7), (d,))
+    z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
+    a = centered_clip_fused_op(xs, 1.0, z, n_iters=8, block=blk)
+    b = centered_clip_fused_op(xs, 1.0, z, n_iters=8, block=2048)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 8, 300), (4, 16, 1025), (6, 6, 128)])
+@pytest.mark.parametrize("tau", [0.5, np.inf])
+def test_batched_fused_matches_per_partition(shape, tau):
+    """The all-partition fused kernel == per-partition fused op == jnp."""
+    n_parts, n, d = shape
+    parts = jax.random.normal(jax.random.key(n_parts * d), (n_parts, n, d)) * 2
+    z = jax.random.normal(jax.random.key(5), (n_parts, d))
+    z = z / jnp.linalg.norm(z, axis=1, keepdims=True)
+    w = jnp.where(jnp.arange(n) % 4 == 0, 0.0, 1.0)
+    agg, s, norms = butterfly_clip_fused_op(parts, tau, z, w, n_iters=10)
+    assert s.shape == (n, n_parts) and norms.shape == (n, n_parts)
+    taus = jnp.full((10,), tau, jnp.float32)
+    for j in range(n_parts):
+        v_j = centered_clip_ref(parts[j], taus, w)
+        s_j, n_j = verify_tables_ref(parts[j], v_j, z[j], tau)
+        np.testing.assert_allclose(np.asarray(agg[j]), np.asarray(v_j), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s[:, j]), np.asarray(s_j), atol=1e-5, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(norms[:, j]), np.asarray(n_j), atol=1e-5)
+
+
+def test_verify_tables_all_op_matches_jnp():
+    n, d = 8, 515
+    g = jax.random.normal(jax.random.key(2), (n, d))
+    agg, parts = bf.butterfly_clip(g, tau=1.0, n_iters=30)
+    z = bf.get_random_directions(7, n, parts.shape[-1])
+    s_j, n_j = bf.verification_tables(parts, agg, z, 1.0)
+    s_k, n_k = bf.verification_tables(parts, agg, z, 1.0, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_j), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_j), atol=1e-5, rtol=1e-4)
+
+
+def test_butterfly_clip_verified_pallas_equals_jnp():
+    n, d = 8, 700
+    g = jax.random.normal(jax.random.key(11), (n, d))
+    z = bf.get_random_directions(3, n, bf.pad_to_parts(d, n) // n)
+    a_j, p_j, s_j, n_j = bf.butterfly_clip_verified(g, 1.0, z, n_iters=20)
+    a_k, p_k, s_k, n_k = bf.butterfly_clip_verified(
+        g, 1.0, z, n_iters=20, use_pallas=True
+    )
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_j), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_j), atol=0)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_j), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_j), atol=1e-5, rtol=1e-4)
+
+
+def test_protocol_fused_path_matches_two_call_path():
+    """BTARDProtocol(use_pallas=True) must walk the same trajectory and ban
+    the same peers as the two-jitted-call path."""
+    from repro.core.protocol import AttackConfig, BTARDProtocol
+
+    D = 48
+    w_true = np.asarray(jax.random.normal(jax.random.key(9), (D,)))
+
+    def grad_fn(peer, step, params, flipped=False):
+        k = jax.random.key((peer * 7919 + step) % 2**31)
+        X = jax.random.normal(k, (4, D))
+        y = X @ w_true
+        if flipped:
+            y = -y
+        return np.asarray(2 * X.T @ (X @ np.asarray(params) - y) / 4, np.float32)
+
+    def run(use_pallas):
+        proto = BTARDProtocol(
+            8, D, grad_fn, byzantine={6, 7},
+            attack=AttackConfig(kind="sign_flip", start_step=2),
+            tau=1.0, clip_iters=12, m_validators=2, seed=0,
+            use_pallas=use_pallas,
+        )
+        params = np.zeros(D, np.float32)
+        traj = []
+        for t in range(8):
+            g, _ = proto.step(params, t)
+            params = params - 0.05 * g
+            traj.append(params.copy())
+        return np.stack(traj), proto.banned
+
+    t_ref, bans_ref = run(False)
+    t_fused, bans_fused = run(True)
+    np.testing.assert_allclose(t_fused, t_ref, atol=1e-5)
+    assert bans_fused == bans_ref

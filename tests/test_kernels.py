@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.ops import butterfly_clip_op, centered_clip_op, verify_tables_op
 from repro.kernels.ref import centered_clip_ref, verify_tables_ref
