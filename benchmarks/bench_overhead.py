@@ -1,6 +1,6 @@
 """Paper App. I.2: BTARD overhead vs plain All-Reduce.
 
-Three views:
+Four views:
   * measured step time of the butterfly robust aggregation + verification
     tables vs a plain mean over stacked peer gradients, as d grows, for both
     the pure-jnp pipeline and the fused Pallas kernel (interpret mode on
@@ -13,13 +13,17 @@ Three views:
     n_iters + 2 (see src/repro/kernels/DESIGN.md);
   * the communication model: per-peer bytes for AR vs BTARD
     (2d for ring/butterfly AR; BTARD adds O(n^2) scalars — independent of d,
-    exactly the paper's §3.1 cost accounting).
+    exactly the paper's §3.1 cost accounting);
+  * the scan-engine view: steps/s of the legacy host protocol loop vs the
+    jitted lax.scan ProtocolState engine (core.engine), at the default
+    clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json.
 
-Emits BENCH_overhead.json next to this file so the perf trajectory is
-machine-trackable across PRs.
+Emits BENCH_overhead.json + BENCH_scan.json next to this file so the perf
+trajectory is machine-trackable across PRs.
 """
 import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +37,9 @@ from repro.core.butterfly import (
     verification_tables,
 )
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "BENCH_overhead.json")
+_DIR = os.path.dirname(os.path.abspath(__file__))
+JSON_PATH = os.path.join(_DIR, "BENCH_overhead.json")
+SCAN_JSON_PATH = os.path.join(_DIR, "BENCH_scan.json")
 
 
 def comm_model(n, d, bytes_per=4):
@@ -58,6 +64,80 @@ def hbm_pass_model(n_iters, n, d, bytes_per=4):
         "fused_bytes": (n_iters + 2) * stack,
         "pass_speedup": (2 * n_iters + 1) / (n_iters + 2),
     }
+
+
+def scan_engine_bench(steps=None, fast=True):
+    """Legacy host loop vs jitted lax.scan ProtocolState engine: steps/s on
+    the controlled classification workload (16 peers, 7 Byzantine,
+    sign-flip), at clip_iters=60 (the protocol default) and at the
+    warm-start budget clip_iters=15. Writes BENCH_scan.json."""
+    from benchmarks.common import classification_setup
+    from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
+    from repro.optim import sgd
+
+    if steps is None:
+        steps = 30 if fast else 100
+    loss_fn, params0, batch_fn, accuracy = classification_setup()
+
+    def make(clip_iters, warm_start=False):
+        cfg = TrainerConfig(
+            n_peers=16,
+            byzantine=tuple(range(9, 16)),
+            attack=AttackConfig(kind="sign_flip", start_step=5),
+            defense="btard",
+            tau=1.0,
+            clip_iters=clip_iters,
+            m_validators=2,
+            seed=0,
+            warm_start=warm_start,
+        )
+        return BTARDTrainer(
+            loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9)
+        )
+
+    def time_run(method, clip_iters, warm_start=False):
+        tr = make(clip_iters, warm_start)
+        getattr(tr, method)(steps)  # warmup: traces + compiles everything
+        t0 = time.perf_counter()
+        getattr(tr, method)(steps)  # steady state (bans settled — the
+        dt = time.perf_counter() - t0  # regime a long run lives in)
+        return steps / dt, accuracy(tr.unraveled_params()), len(tr.banned)
+
+    loop_sps, loop_acc, loop_ban = time_run("run", 60)
+    scan_sps, scan_acc, scan_ban = time_run("run_scan", 60)
+    warm_sps, warm_acc, warm_ban = time_run("run_scan", 15, warm_start=True)
+    payload = {
+        "bench": "scan_engine",
+        "backend": jax.default_backend(),
+        "steps": steps,
+        "n_peers": 16,
+        "legacy_loop": {
+            "steps_per_s": loop_sps, "clip_iters": 60,
+            "acc": loop_acc, "banned": loop_ban,
+        },
+        "scan_engine": {
+            "steps_per_s": scan_sps, "clip_iters": 60,
+            "acc": scan_acc, "banned": scan_ban,
+        },
+        "scan_engine_warm15": {
+            "steps_per_s": warm_sps, "clip_iters": 15, "warm_start": True,
+            "acc": warm_acc, "banned": warm_ban,
+        },
+        "scan_speedup_x": scan_sps / max(loop_sps, 1e-9),
+        "warm_speedup_x": warm_sps / max(loop_sps, 1e-9),
+    }
+    with open(SCAN_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit(
+        "overhead/scan_engine",
+        1e6 / max(scan_sps, 1e-9),
+        f"loop_sps={loop_sps:.1f};scan_sps={scan_sps:.1f};"
+        f"warm15_sps={warm_sps:.1f};speedup={payload['scan_speedup_x']:.1f}x;"
+        f"acc_loop={loop_acc:.3f};acc_scan={scan_acc:.3f};"
+        f"acc_warm={warm_acc:.3f}",
+    )
+    print(f"wrote {SCAN_JSON_PATH}", flush=True)
+    return payload
 
 
 def main(fast=True):
@@ -127,6 +207,7 @@ def main(fast=True):
     with open(JSON_PATH, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {JSON_PATH}", flush=True)
+    scan_engine_bench(fast=fast)
 
 
 if __name__ == "__main__":

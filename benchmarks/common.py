@@ -51,7 +51,11 @@ def classification_setup():
     return loss_fn, params0, batch_fn, accuracy
 
 
-def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2, seed=0):
+def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2,
+             seed=0, scan=False, clip_iters=60, warm_start=False):
+    """One attack x defense cell. scan=True routes the BTARD defense through
+    the jitted lax.scan engine (core.engine) — same protocol, one compiled
+    program for all ``steps`` rounds instead of a host loop."""
     loss_fn, params0, batch_fn, accuracy = classification_setup()
     byz = tuple(range(n_peers - n_byz, n_peers))
     cfg = TrainerConfig(
@@ -60,13 +64,26 @@ def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2, seed=
         attack=AttackConfig(kind=attack, start_step=5, delay=5),
         defense=defense,
         tau=tau,
+        clip_iters=clip_iters,
         m_validators=m,
         seed=seed,
+        warm_start=warm_start,
     )
     tr = BTARDTrainer(
         loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9)
     )
+    use_scan = scan and defense == "btard"
+    if use_scan:
+        # warm the compile cache on the (pure) runner so the timed section
+        # measures steps, not the one-off trace of an N-step lax.scan
+        runner = tr._get_scan_runner(steps)
+        jax.block_until_ready(
+            runner(tr.protocol.state, jnp.asarray(tr.params), tr._opt_state)
+        )
     t0 = time.perf_counter()
-    tr.run(steps)
+    if use_scan:
+        tr.run_scan(steps)
+    else:
+        tr.run(steps)
     dt = time.perf_counter() - t0
     return accuracy(tr.unraveled_params()), len(tr.banned), dt / steps * 1e6

@@ -6,5 +6,13 @@ from repro.core.centered_clip import (  # noqa: F401
     tau_schedule,
 )
 from repro.core.butterfly import butterfly_clip, merge_parts, split_parts  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    EngineConfig,
+    ProtocolState,
+    StepOutputs,
+    init_state,
+    protocol_step,
+    scan_protocol,
+)
 from repro.core.protocol import AttackConfig, BTARDProtocol  # noqa: F401
 from repro.core.btard_sgd import BTARDTrainer, TrainerConfig  # noqa: F401

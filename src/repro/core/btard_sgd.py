@@ -17,6 +17,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import AGGREGATORS
 from repro.core import attacks as attacks_mod
+from repro.core import engine as eng
 from repro.core.protocol import AttackConfig, BTARDProtocol
 from repro.optim import sgd
 from repro.optim.optimizers import apply_updates
@@ -35,6 +36,7 @@ class TrainerConfig:
     clip_lambda: float | None = None  # enables BTARD-Clipped-SGD
     seed: int = 0
     use_pallas: bool = False  # fused aggregation+tables kernel (DESIGN.md)
+    warm_start: bool = False  # CenteredClip v0 = last aggregate (DESIGN.md)
 
 
 class BTARDTrainer:
@@ -67,9 +69,11 @@ class BTARDTrainer:
             clip_lambda=cfg.clip_lambda,
             seed=cfg.seed,
             use_pallas=cfg.use_pallas,
+            warm_start=cfg.warm_start,
         )
         self.history: list = []
         self._step = 0
+        self._scan_runners: dict = {}  # n_steps -> jitted scan runner
 
     # ------------------------------------------------------------------
     def _peer_grad(self, peer, step, params_flat, flipped=False):
@@ -146,6 +150,105 @@ class BTARDTrainer:
             self.history.append(rec)
             if log:
                 log(rec)
+        return self.history
+
+    # ------------------------------------------------------------------
+    # Scan fast path: the whole loop (grads -> protocol -> optimizer) as
+    # ONE jitted lax.scan over the ProtocolState pytree (core.engine)
+    # ------------------------------------------------------------------
+    def _pure_grads_fn(self):
+        """grads_fn(flat_params, t, flips) -> (G, honest_G) for the engine.
+        Requires batch_fn to be jax-traceable in (peer, step) — true of the
+        public-seed pipelines; arbitrary host batch_fns must use run()."""
+        label_flip = self.cfg.attack.kind == "label_flip"
+        unravel, loss_fn, batch_fn = self._unravel, self._loss, self.batch_fn
+        n = self.cfg.n_peers
+
+        def per_peer(flat, i, t, flip):
+            def g_of(flipped):
+                batch = batch_fn(i, t, flipped)
+                return ravel_pytree(
+                    jax.grad(lambda p: loss_fn(p, batch))(unravel(flat))
+                )[0]
+
+            g_honest = g_of(False)
+            g = (
+                jnp.where(flip, g_of(True), g_honest) if label_flip else g_honest
+            )
+            return g, g_honest
+
+        def grads_fn(flat, t, flips):
+            return jax.vmap(lambda i, f: per_peer(flat, i, t, f))(
+                jnp.arange(n), flips
+            )
+
+        return grads_fn
+
+    def _get_scan_runner(self, n_steps):
+        """Jitted (state, flat_params, opt_state) -> scanned n_steps rounds;
+        cached per length. Pure — callers may invoke it directly to warm the
+        compile cache without advancing the trainer."""
+        runner = self._scan_runners.get(n_steps)
+        if runner is not None:
+            return runner
+        proto = self.protocol
+        ecfg = proto.engine_config
+        grads_fn = self._pure_grads_fn()
+        opt = self.opt
+
+        def body(carry, _):
+            st, flat, opt_state = carry
+            flips = eng.flip_mask(ecfg, st, proto.byz_mask)
+            G, honest_G = grads_fn(flat, st.step, flips)
+            st, out = eng.protocol_step(ecfg, st, proto.byz_mask, G, honest_G)
+            updates, opt_state = opt.update(
+                out.g_hat, opt_state, flat, st.step - 1
+            )
+            flat = apply_updates(flat, updates)
+            return (st, flat, opt_state), out
+
+        runner = jax.jit(
+            lambda s, f, o: jax.lax.scan(body, (s, f, o), None, length=n_steps)
+        )
+        self._scan_runners[n_steps] = runner
+        return runner
+
+    def run_scan(self, n_steps, log=None):
+        """Run ``n_steps`` full BTARD rounds under one jitted ``lax.scan`` —
+        zero host sync between steps (the legacy loop pays per-phase device
+        round-trips). Bit-matches run() up to XLA fusion-order f32 noise;
+        bans/accusations are mirrored back into the host bookkeeping."""
+        if self.cfg.defense != "btard":
+            raise ValueError("run_scan requires the btard defense")
+        proto = self.protocol
+        runner = self._get_scan_runner(n_steps)
+        (state, flat, opt_state), outs = runner(
+            proto.state, jnp.asarray(self.params), self._opt_state
+        )
+        proto.state = state
+        self.params = np.asarray(flat, np.float32)
+        self._opt_state = opt_state
+        # mirror the stacked outputs into the legacy history/ban sets
+        banned_now = np.asarray(outs.banned_now)
+        reasons = np.asarray(outs.ban_reason_now)
+        g_norms = np.linalg.norm(np.asarray(outs.g_hat), axis=1)
+        for k in range(n_steps):
+            new = [
+                (int(i), eng.BAN_REASON_NAMES[int(reasons[k, i])])
+                for i in np.nonzero(banned_now[k])[0]
+            ]
+            proto.banned.update(p for p, _ in new)
+            rec = {
+                "step": self._step,
+                "grad_norm": float(g_norms[k]),
+                "n_banned": len(proto.banned),
+                "banned_now": new,
+            }
+            self.history.append(rec)
+            if log:
+                log(rec)
+            self._step += 1
+        proto.validators = proto._mask_to_list(state.validator)
         return self.history
 
     def unraveled_params(self):

@@ -39,13 +39,17 @@ def merge_parts(agg, d):
     return agg.reshape(-1)[:d]
 
 
-def butterfly_clip(grads, tau, n_iters: int = 50, weights=None, use_pallas=False):
+def butterfly_clip(
+    grads, tau, n_iters: int = 50, weights=None, use_pallas=False, v0=None
+):
     """Robust butterfly all-reduce: partition j is CenteredClip-aggregated
     across peers (by peer j in the real topology). Returns (agg_parts, parts).
 
     grads: (n, d). agg_parts: (n_parts, part). parts: (n, n_parts, part).
     use_pallas: run the aggregation through the fused all-partition TPU
     kernel (kernels/centered_clip.butterfly_clip_pallas).
+    v0: optional (n_parts, part) warm start — the previous step's aggregate
+    (cuts the iteration budget; see kernels/DESIGN.md warm-start section).
     """
     n = grads.shape[0]
     parts = split_parts(grads, n)
@@ -54,17 +58,21 @@ def butterfly_clip(grads, tau, n_iters: int = 50, weights=None, use_pallas=False
         from repro.kernels.ops import butterfly_clip_op
 
         agg = butterfly_clip_op(
-            jnp.swapaxes(parts, 0, 1), tau, weights, n_iters=n_iters
+            jnp.swapaxes(parts, 0, 1), tau, weights, n_iters=n_iters, v0=v0
         )
         return agg, parts
 
     clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
-    agg = jax.vmap(lambda xs: clip(xs))(jnp.swapaxes(parts, 0, 1))  # (n_parts, part)
+    stacked = jnp.swapaxes(parts, 0, 1)  # (n_parts, n, part)
+    if v0 is None:
+        agg = jax.vmap(lambda xs: clip(xs))(stacked)  # (n_parts, part)
+    else:
+        agg = jax.vmap(lambda xs, v: clip(xs, v0=v))(stacked, v0)
     return agg, parts
 
 
 def butterfly_clip_verified(
-    grads, tau, z, n_iters: int = 50, weights=None, use_pallas=False
+    grads, tau, z, n_iters: int = 50, weights=None, use_pallas=False, v0=None
 ):
     """ButterflyClip aggregation AND the Alg. 6 broadcast tables together.
 
@@ -76,6 +84,7 @@ def butterfly_clip_verified(
     (kernels/centered_clip.butterfly_clip_fused_pallas): the whole robust
     aggregation plus tables costs n_iters + 2 HBM passes of the stacked
     partitions instead of 2*n_iters + 1 (see kernels/DESIGN.md).
+    v0: optional (n_parts, part) warm start (previous aggregate).
     """
     n = grads.shape[0]
     parts = split_parts(grads, n)
@@ -85,12 +94,15 @@ def butterfly_clip_verified(
         from repro.kernels.ops import butterfly_clip_fused_op
 
         agg, s, norms = butterfly_clip_fused_op(
-            stacked, tau, z, weights, n_iters=n_iters
+            stacked, tau, z, weights, n_iters=n_iters, v0=v0
         )
         return agg, parts, s, norms
 
     clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
-    agg = jax.vmap(lambda xs: clip(xs))(stacked)
+    if v0 is None:
+        agg = jax.vmap(lambda xs: clip(xs))(stacked)
+    else:
+        agg = jax.vmap(lambda xs, v: clip(xs, v0=v))(stacked, v0)
     s, norms = verification_tables(parts, agg, z, tau)
     return agg, parts, s, norms
 

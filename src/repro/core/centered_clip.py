@@ -72,15 +72,23 @@ def centered_clip(xs, tau, n_iters: int = 20, weights=None, v0=None):
     return jax.lax.fori_loop(0, n_iters, body, v)
 
 
-def centered_clip_to_tol(xs, tau, eps: float = 1e-6, max_iters: int = 200, weights=None):
+def centered_clip_to_tol(
+    xs, tau, eps: float = 1e-6, max_iters: int = 200, weights=None, v0=None
+):
     """Run CenteredClip to convergence ||v_{l+1}-v_l|| <= eps (paper §4.1
-    runs 'iterative algorithms to convergence with eps=1e-6')."""
+    runs 'iterative algorithms to convergence with eps=1e-6').
+
+    v0: optional warm start (e.g. last step's aggregate). The fixed point is
+    unique for tau > 0 over a fixed peer set, so warm starting changes the
+    iteration count, never the limit — returned ``iters`` lets callers
+    measure the saving (Fig. 9 / warm-start analysis in kernels/DESIGN.md).
+    """
     xs = jnp.asarray(xs)
     n, d = xs.shape
     if weights is None:
         weights = jnp.ones((n,), xs.dtype)
     wsum = jnp.maximum(weights.sum(), 1e-30)
-    v = jnp.zeros((d,), xs.dtype)
+    v = jnp.zeros((d,), xs.dtype) if v0 is None else v0.astype(xs.dtype)
 
     def cond(state):
         v, delta, it = state

@@ -1,0 +1,590 @@
+"""Jit/scan-compatible BTARD protocol engine (paper Alg. 1-7).
+
+The legacy ``core.protocol.BTARDProtocol`` simulated every phase host-side:
+numpy loops, sha256 commitments, python accusation lists — one device
+round-trip per phase, so the *protocol* dominated step time beyond toy
+sizes. This module is the same state machine as pure functions over an
+explicit :class:`ProtocolState` pytree, so one full step jit-compiles and N
+steps run under ``lax.scan`` with zero host synchronisation:
+
+    compute_grads -> apply_attack -> butterfly_clip -> verify -> accuse/ban
+
+Equivalences to the wire protocol (all recorded in kernels/DESIGN.md):
+
+* sha256 commitments ≡ array equality — a commitment catches exactly a
+  value that differs from the recomputed one, so the engine compares
+  arrays directly (bit-identical rows never trip, attacked rows always do);
+* MPRNG commit/reveal ≡ a deterministic per-step fold of the run's base
+  key — unbiasable by construction, like the host protocol's abort-ban
+  rule (the abort-bias attack is modelled by its *outcome*: aborters get
+  banned);
+* the banned-peer set shrink ≡ a static-shape ``active`` mask: banned rows
+  are zeroed and carry weight 0, partition ownership stays peer j <->
+  partition j (the butterfly assignment of Alg. 2).
+
+``core.protocol.BTARDProtocol`` is now a thin host wrapper over
+:func:`protocol_step` that mirrors bans/accusations out of the state pytree
+(host ``grad_fn`` support + the legacy ``StepInfo`` API), so a scanned
+N-step run and N wrapper calls are the *same computation* — property-tested
+in ``tests/test_engine.py``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as attacks_mod
+from repro.core import butterfly as bf
+
+# Ban reason codes (StepOutputs.ban_reason_now / ProtocolState.ban_reason)
+BAN_NONE = 0
+BAN_CHEATER = 1  # accused and the recompute proved it (ACCUSE, Alg. 4)
+BAN_COVERUP = 2  # misreported s for a banned peer's partition (Alg. 4 L11-13)
+BAN_FALSE_ACCUSER = 3  # slandered an honest peer (Hammurabi rule, Alg. 3)
+BAN_MPRNG = 4  # aborted / mismatched the MPRNG commit-reveal (App. A.2)
+
+BAN_REASON_NAMES = {
+    BAN_NONE: "",
+    BAN_CHEATER: "accusation verified (ACCUSE)",
+    BAN_COVERUP: "covered up a banned peer (s mismatch)",
+    BAN_FALSE_ACCUSER: "false accusation",
+    BAN_MPRNG: "mprng abort/mismatch",
+}
+
+
+class ProtocolState(NamedTuple):
+    """One BTARD run's full per-step carry — a plain pytree of arrays.
+
+    ``key`` is the run's base PRNG key; every draw is a fold of (key, step,
+    phase), so a step's randomness is a pure function of the state — the
+    property that makes scan and per-step execution bit-identical.
+    """
+
+    step: jnp.ndarray  # () i32 — t
+    key: jnp.ndarray  # PRNG key (base of the per-step chain)
+    active: jnp.ndarray  # (n,) f32 — 1 active, 0 banned
+    validator: jnp.ndarray  # (n,) f32 — C_t (elected at end of step t-1)
+    prev_agg: jnp.ndarray  # (n_parts, part) f32 — last aggregate (warm start)
+    ban_step: jnp.ndarray  # (n,) i32 — step banned at, -1 if active
+    ban_reason: jnp.ndarray  # (n,) i32 — BAN_* code
+    accused_count: jnp.ndarray  # (n,) i32 — accusation ledger (cumulative)
+    last_checked: jnp.ndarray  # (n,) i32 — step last audited by a validator
+    delay_buf: jnp.ndarray  # (D, n, d) f32 — ring buffer for delayed attack
+
+
+class StepOutputs(NamedTuple):
+    """Per-step observables (stacked along the leading axis under scan)."""
+
+    g_hat: jnp.ndarray  # (d,) the robust aggregate
+    seed: jnp.ndarray  # () i32 — the step's MPRNG output
+    banned_now: jnp.ndarray  # (n,) bool
+    ban_reason_now: jnp.ndarray  # (n,) i32
+    accuse_mat: jnp.ndarray  # (n, n) bool — accuser x target (peers)
+    sys_accuse: jnp.ndarray  # (n,) bool — checksum / Delta_max accusations
+    cheated: jnp.ndarray  # (n,) bool — recompute verdict per peer
+    checksum_violations: jnp.ndarray  # () i32
+    check_averaging: jnp.ndarray  # () i32
+    n_active: jnp.ndarray  # () i32 — active count at step start
+    validators: jnp.ndarray  # (n,) f32 — this step's validator mask
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Static (hashable) protocol configuration — one jit cache entry per
+    distinct config; everything dynamic lives in ProtocolState."""
+
+    n: int
+    d: int
+    tau: float = 1.0
+    clip_iters: int = 60
+    m_validators: int = 1
+    delta_max: float | None = None
+    clip_lambda: float | None = None
+    # attack switches (core.protocol.AttackConfig, flattened)
+    attack: str = "none"
+    start_step: int = 0
+    end_step: int = 10**9
+    lam: float = 1000.0
+    delay: int = 1000
+    aggregator_attack: bool = False
+    aggregator_scale: float = 0.0
+    misreport_s: bool = True
+    false_accuse: bool = False
+    mprng_abort: bool = False
+    # engine switches
+    warm_start: bool = False  # v0 = previous aggregate (fewer clip iters)
+    use_pallas: bool = False
+
+    @property
+    def n_parts(self) -> int:
+        return self.n
+
+    @property
+    def part(self) -> int:
+        return bf.pad_to_parts(self.d, self.n) // self.n
+
+    @property
+    def has_gradient_attack(self) -> bool:
+        return self.attack not in ("none", "label_flip")
+
+    @property
+    def has_any_attack(self) -> bool:
+        return (
+            self.attack != "none"
+            or self.aggregator_attack
+            or self.false_accuse
+            or self.mprng_abort
+        )
+
+    @property
+    def delay_depth(self) -> int:
+        return max(1, self.delay) if self.attack == "delayed_gradient" else 1
+
+
+def config_from_attack(n, d, attack, **kw) -> EngineConfig:
+    """Build an EngineConfig from a core.protocol.AttackConfig plus the
+    protocol kwargs (tau, clip_iters, ...)."""
+    return EngineConfig(
+        n=n,
+        d=d,
+        attack=attack.kind,
+        start_step=attack.start_step,
+        end_step=attack.end_step,
+        lam=attack.lam,
+        delay=attack.delay,
+        aggregator_attack=attack.aggregator_attack,
+        aggregator_scale=attack.aggregator_scale,
+        misreport_s=attack.misreport_s,
+        false_accuse=attack.false_accuse,
+        mprng_abort=attack.mprng_abort,
+        **kw,
+    )
+
+
+def init_state(cfg: EngineConfig, seed: int = 0) -> ProtocolState:
+    n = cfg.n
+    buf_elems = cfg.delay_depth * n * cfg.d
+    if buf_elems > 2**28:  # > ~0.5 GiB of bf16 carried through every step
+        raise ValueError(
+            f"delayed_gradient ring buffer would be (delay={cfg.delay}, "
+            f"n={n}, d={cfg.d}) = {2 * buf_elems / 2**30:.1f} GiB of scan "
+            "carry; set AttackConfig.delay to the actual delay you want "
+            "(typical runs use 5-50 — the legacy host buffer grew lazily, "
+            "the engine's is dense)"
+        )
+    key = jax.random.PRNGKey(seed)
+    # elect step-0 validators from the same chain the steps use (fold at -1)
+    validator = _elect(cfg, jax.random.fold_in(key, 2**31 - 1),
+                       jnp.ones((n,), jnp.float32))
+    return ProtocolState(
+        step=jnp.asarray(0, jnp.int32),
+        key=key,
+        active=jnp.ones((n,), jnp.float32),
+        validator=validator,
+        prev_agg=jnp.zeros((cfg.n_parts, cfg.part), jnp.float32),
+        ban_step=jnp.full((n,), -1, jnp.int32),
+        ban_reason=jnp.zeros((n,), jnp.int32),
+        accused_count=jnp.zeros((n,), jnp.int32),
+        last_checked=jnp.full((n,), -1, jnp.int32),
+        # bf16: the buffer only feeds the delayed ATTACK rows (they mismatch
+        # honest_G regardless), and it is the one O(delay·n·d) carry
+        delay_buf=jnp.zeros(
+            (cfg.delay_depth, n, cfg.d),
+            jnp.bfloat16 if cfg.delay_depth > 1 else jnp.float32,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Phase functions — each a pure map over (cfg, state fragments)
+# ---------------------------------------------------------------------------
+def _attacking(cfg: EngineConfig, t):
+    if not cfg.has_any_attack:
+        return jnp.asarray(False)
+    return (t >= cfg.start_step) & (t < cfg.end_step)
+
+
+def _phase_key(state: ProtocolState, phase: int):
+    return jax.random.fold_in(jax.random.fold_in(state.key, state.step), phase)
+
+
+def flip_mask(cfg: EngineConfig, state: ProtocolState, byz_mask):
+    """Peers whose gradients are computed with flipped labels this step
+    (LABEL FLIP happens at gradient time — feed this to ``grads_fn``)."""
+    if cfg.attack != "label_flip":
+        return jnp.zeros((cfg.n,), bool)
+    return _attacking(cfg, state.step) & (byz_mask > 0) & (state.active > 0)
+
+
+def phase_attack(cfg: EngineConfig, state: ProtocolState, G, honest_G, byz):
+    """apply_attack: Byzantine rows swap in their attack vectors; the delay
+    ring buffer rotates; honest peers optionally self-clip (Alg. 9)."""
+    t = state.step
+    att = _attacking(cfg, t)
+    active_b = state.active > 0
+    delay_buf = state.delay_buf
+
+    if cfg.has_gradient_attack:
+        slot = t % cfg.delay_depth
+        # written at t - delay_depth (zeros before)
+        delayed = delay_buf[slot].astype(jnp.float32)
+        G = attacks_mod.apply_attack(
+            attacks_mod.attack_index(cfg.attack),
+            G,
+            byz & active_b & att,
+            key=_phase_key(state, 1),
+            lam=cfg.lam,
+            delayed=delayed,
+            hon_mask=~byz & active_b,
+        )
+    # history for the delayed attack (honest rows of byzantine peers)
+    if cfg.attack == "delayed_gradient":
+        slot = t % cfg.delay_depth
+        delay_buf = delay_buf.at[slot].set(
+            jnp.where((byz & active_b)[:, None], honest_G, 0.0).astype(
+                delay_buf.dtype
+            )
+        )
+
+    if cfg.clip_lambda is not None:  # BTARD-Clipped-SGD (Alg. 9, honest peers)
+        nrm = jnp.linalg.norm(G, axis=1)
+        scale = jnp.minimum(1.0, cfg.clip_lambda / jnp.maximum(nrm, 1e-30))
+        clip_rows = (~byz)[:, None]
+        G = jnp.where(clip_rows, G * scale[:, None], G)
+        honest_G = jnp.where(clip_rows, G, honest_G)
+    return G, honest_G, delay_buf
+
+
+def phase_mprng(cfg: EngineConfig, state: ProtocolState, byz):
+    """MPRNG: the shared seed plus the abort-ban outcome. The commit/reveal
+    transcript (core.mprng) collapses to an unbiased draw; a Byzantine
+    aborter (trying the learn-early-and-abort bias) is banned — here modelled
+    as: when the abort-bias attack is on and the candidate draw has the
+    parity the attacker dislikes, every attacking peer aborts and is banned."""
+    seed = jax.random.randint(
+        _phase_key(state, 0), (), 0, jnp.int32(2**31 - 1), jnp.int32
+    )
+    mprng_ban = jnp.zeros((cfg.n,), bool)
+    if cfg.mprng_abort:
+        abort = (seed % 2 == 1) & _attacking(cfg, state.step)
+        mprng_ban = abort & byz & (state.active > 0)
+    return seed, mprng_ban
+
+
+def phase_butterfly(cfg: EngineConfig, state: ProtocolState, G, weights, seed):
+    """butterfly_clip: per-partition CenteredClip + the Alg. 6 broadcast
+    tables, optionally warm-started from the previous aggregate."""
+    z = bf.get_random_directions(seed, cfg.n_parts, cfg.part)
+    v0 = None
+    if cfg.warm_start:
+        v0 = jnp.where(state.step > 0, state.prev_agg, 0.0)
+    if cfg.aggregator_attack and cfg.aggregator_scale > 0:
+        # tables must be computed against the (possibly corrupted) received
+        # aggregate, so aggregation and tables split into two calls here
+        agg, parts = bf.butterfly_clip(
+            G, tau=cfg.tau, n_iters=cfg.clip_iters, weights=weights,
+            use_pallas=cfg.use_pallas, v0=v0,
+        )
+        return agg, parts, z, None, None
+    agg, parts, s_tbl, norm_tbl = bf.butterfly_clip_verified(
+        G, cfg.tau, z, n_iters=cfg.clip_iters, weights=weights,
+        use_pallas=cfg.use_pallas, v0=v0,
+    )
+    return agg, parts, z, s_tbl, norm_tbl
+
+
+def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
+    """Byzantine aggregators corrupt their partitions; every honest peer
+    then reports tables against the corrupted value it received, and one
+    colluder cancels the Verification-2 checksum (App. C)."""
+    honest_agg = agg
+    corrupt = jnp.zeros((cfg.n_parts,), bool)
+    if cfg.aggregator_attack and cfg.aggregator_scale > 0:
+        att = _attacking(cfg, state.step)
+        corrupt = byz & (state.active > 0) & att
+        agg = attacks_mod.aggregator_shift_all(
+            agg, corrupt, _phase_key(state, 3), cfg.aggregator_scale
+        )
+        s_tbl, norm_tbl = bf.verification_tables(
+            parts, agg, z, cfg.tau, use_pallas=cfg.use_pallas
+        )
+    else:
+        s_tbl = norm_tbl = None
+    return agg, honest_agg, corrupt, s_tbl, norm_tbl
+
+
+def phase_misreport(cfg, s_tbl, corrupt, byz, active, weights):
+    """The first active colluder cancels sum_i w_i s_i^j for each corrupted
+    partition j (exactly the legacy protocol's liar selection)."""
+    if not (cfg.aggregator_attack and cfg.misreport_s):
+        return s_tbl
+    is_liar_cand = byz & (active > 0)
+    liar = jnp.argmax(is_liar_cand)  # first active byzantine row
+    has_liar = is_liar_cand.any()
+    w_liar = weights[liar]
+    col_sums = (s_tbl * weights[:, None]).sum(0)  # (n_parts,)
+    others = col_sums - w_liar * s_tbl[liar]
+    lie = -others / jnp.maximum(w_liar, 1e-30)
+    new_row = jnp.where(corrupt & has_liar & (w_liar > 0), lie, s_tbl[liar])
+    return s_tbl.at[liar].set(new_row)
+
+
+def phase_verify(cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
+                 norm_tbl, true_norm, byz, weights):
+    """Verifications 1-3 + validator spot checks -> accusation matrices."""
+    n = cfg.n
+    active_b = state.active > 0
+    att = _attacking(cfg, state.step)
+
+    tol_norm = 1e-4 * (1.0 + true_norm)
+    tol_s = 1e-4 * (1.0 + jnp.abs(true_s))
+    mismatch_norm = jnp.abs(norm_tbl - true_norm) > tol_norm  # (peer, part)
+    mismatch_s = jnp.abs(s_tbl - true_s) > tol_s
+
+    # V1 + V2a: honest aggregator j accuses any i misreporting for col j
+    agg_ok = active_b & ~byz  # byzantine aggregators stay silent
+    accuse = agg_ok[:, None] & (mismatch_norm | mismatch_s).T  # (j, i)
+
+    # V2b: global checksum per partition (system accusation on the owner)
+    cs_tol = bf.checksum_tolerance(agg, parts)
+    sums = (s_tbl * weights[:, None]).sum(0)
+    sys_accuse = jnp.abs(sums) > cs_tol
+    checksum_violations = sys_accuse.sum().astype(jnp.int32)
+
+    # V3: Delta_max majority vote -> CHECKAVERAGING(j)
+    check_averaging = jnp.asarray(0, jnp.int32)
+    if cfg.delta_max is not None:
+        votes = ((true_norm > cfg.delta_max) * weights[:, None]).sum(0)
+        v3 = votes > weights.sum() / 2.0
+        check_averaging = v3.sum().astype(jnp.int32)
+        sys_accuse = sys_accuse | v3
+
+    # validator spot checks — audit-age-weighted CHOOSETARGET. The m
+    # validators take the m distinct candidates with the highest
+    # age + U(0,1) score (age = steps since last audit), so every active
+    # peer is audited at least every ~ceil(n/m) steps — the uniform draw's
+    # coupon-collector tail is gone — while fresh per-step jitter keeps the
+    # audit ORDER unpredictable. Targets are publicly derivable from the
+    # revealed seed (like the paper's CHOOSETARGET), so every peer can
+    # maintain the same last_checked ledger.
+    cand = active_b & (state.validator <= 0)
+    n_cand = cand.sum()
+    u = jax.random.uniform(_phase_key(state, 5), (n,))
+    age = (state.step - state.last_checked).astype(jnp.float32)
+    score = jnp.where(cand, age + u, -jnp.inf)
+    order = jnp.argsort(-score)  # candidate peer ids by audit priority
+    is_validator = (state.validator > 0) & active_b
+    val_ord = jnp.clip(jnp.cumsum(is_validator) - 1, 0, n - 1)
+    target = order[val_ord]  # (n,) — validator v audits target[v]
+    valid_audit = is_validator & (val_ord < n_cand)
+
+    grad_mismatch = jnp.any(G != honest_G, axis=1)  # commitment recompute
+    row_tol = 1e-4 * (1.0 + jnp.abs(true_s).max(axis=1))
+    s_row_mismatch = jnp.abs(s_tbl - true_s).max(axis=1) > row_tol
+
+    caught = grad_mismatch[target] | s_row_mismatch[target]
+    val_accuse = is_validator & ~byz & caught & valid_audit
+    if cfg.false_accuse:
+        val_accuse = val_accuse | (is_validator & byz & att & valid_audit)
+    target_hot = jax.nn.one_hot(target, n, dtype=bool)
+    accuse = accuse | (target_hot & val_accuse[:, None])
+    audited = (target_hot & valid_audit[:, None]).any(axis=0)
+    last_checked = jnp.where(audited, state.step, state.last_checked)
+
+    # accusations only flow between active peers
+    accuse = accuse & active_b[:, None] & active_b[None, :]
+    sys_accuse = sys_accuse & active_b
+    return (accuse, sys_accuse, mismatch_s, checksum_violations,
+            check_averaging, last_checked)
+
+
+def phase_accuse_ban(cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
+                     G, honest_G, agg, honest_agg, s_tbl, true_s,
+                     norm_tbl, true_norm):
+    """ACCUSE resolution (Alg. 4): everyone recomputes the accused peer's
+    work from the public seed; the guilty party is the target if the
+    accusation holds (plus everyone who covered it up), else the accuser."""
+    active_b = state.active > 0
+
+    cheated = (
+        jnp.any(G != honest_G, axis=1)  # gradient attack
+        | jnp.any(  # s misreport
+            jnp.abs(s_tbl - true_s) > 1e-5 + 1e-3 * jnp.abs(true_s), axis=1
+        )
+        | jnp.any(  # norm misreport
+            jnp.abs(norm_tbl - true_norm) > 1e-5 + 1e-3 * jnp.abs(true_norm),
+            axis=1,
+        )
+        | jnp.any(agg != honest_agg, axis=1)  # aggregation attack (owner j)
+    )
+
+    accused = sys_accuse | accuse.any(axis=0)
+    ban_cheater = accused & cheated & active_b
+    # Alg. 4 L11-13: peers whose reported s for a guilty peer's partition
+    # mismatches the recomputed value covered for it -> banned too
+    ban_coverup = (mismatch_s & ban_cheater[None, :]).any(axis=1) & active_b
+    # Hammurabi: accusing a peer the recompute exonerates bans the accuser
+    ban_false = (accuse & ~cheated[None, :]).any(axis=1) & active_b
+
+    banned_now = ban_cheater | ban_coverup | ban_false | (mprng_ban & active_b)
+    reason = jnp.where(
+        ban_cheater, BAN_CHEATER,
+        jnp.where(ban_coverup, BAN_COVERUP,
+                  jnp.where(ban_false, BAN_FALSE_ACCUSER,
+                            jnp.where(mprng_ban, BAN_MPRNG, BAN_NONE))),
+    ).astype(jnp.int32)
+    reason = jnp.where(banned_now, reason, BAN_NONE)
+
+    new_active = state.active * (1.0 - banned_now)
+    return new_active, banned_now, reason, cheated, accused.astype(jnp.int32)
+
+
+def _elect(cfg: EngineConfig, key, active):
+    """Next step's validators: m uniform draws without replacement over the
+    active peers, never all of them (Alg. 1 L19 keeps >= 1 contributor)."""
+    score = jnp.where(active > 0, jax.random.uniform(key, (cfg.n,)), -jnp.inf)
+    rank = jnp.argsort(jnp.argsort(-score))
+    m_eff = jnp.minimum(cfg.m_validators, jnp.maximum(active.sum() - 1, 0))
+    return ((rank < m_eff) & (active > 0)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# One full protocol step (jit-compilable, scan-compatible)
+# ---------------------------------------------------------------------------
+def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
+                  honest_G):
+    """One BTARD-SGD aggregation round as a pure function.
+
+    G / honest_G: (n, d) — honest_G is what a validator recomputing from the
+    public seed obtains (equals G except for label-flipped rows). Banned
+    rows are zeroed internally, so their supplied values are irrelevant.
+    Returns (new_state, StepOutputs).
+    """
+    byz = jnp.asarray(byz_mask) > 0
+    active = state.active
+    validator = state.validator * active
+    weights = active * (1.0 - validator)  # Alg. 1 L19: validators sit out
+
+    keep = active[:, None] > 0
+    G = jnp.where(keep, jnp.asarray(G, jnp.float32), 0.0)
+    honest_G = jnp.where(keep, jnp.asarray(honest_G, jnp.float32), 0.0)
+
+    # ---- apply_attack ----------------------------------------------------
+    G, honest_G, delay_buf = phase_attack(cfg, state, G, honest_G, byz)
+
+    # ---- MPRNG (shared seed + abort bans) --------------------------------
+    seed, mprng_ban = phase_mprng(cfg, state, byz)
+
+    # ---- butterfly_clip (+ tables) ---------------------------------------
+    agg, parts, z, s_tbl, norm_tbl = phase_butterfly(
+        cfg, state, G, weights, seed
+    )
+    agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
+        cfg, state, agg, parts, z, byz, weights
+    )
+    if s_tbl is None:
+        s_tbl, norm_tbl = s2, n2
+    true_s, true_norm = s_tbl, norm_tbl
+    s_tbl = phase_misreport(cfg, s_tbl, corrupt, byz, active, weights)
+
+    # ---- verify ----------------------------------------------------------
+    (accuse, sys_accuse, mismatch_s, cs_viol, chk_avg,
+     last_checked) = phase_verify(
+        cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
+        norm_tbl, true_norm, byz, weights,
+    )
+
+    # ---- accuse / ban ----------------------------------------------------
+    new_active, banned_now, reason, cheated, accused_inc = phase_accuse_ban(
+        cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
+        G, honest_G, agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
+    )
+
+    # ---- elect next validators ------------------------------------------
+    next_validator = _elect(cfg, _phase_key(state, 4), new_active)
+
+    g_hat = bf.merge_parts(agg, cfg.d)
+    # warm-start hygiene: only carry the aggregate forward as v0 when this
+    # step's PUBLIC misbehaviour signals were clean — after a ban or a
+    # Delta_max vote the aggregate may be corrupted, so the next step
+    # cold-starts rather than seeding from it. (The raw checksum is NOT the
+    # gate: far from convergence — exactly the small-clip_iters regime warm
+    # start enables — its residual legitimately exceeds tolerance. A
+    # colluder who cancels the checksum evades this gate; the carried bias
+    # stays bounded by the per-step corruption scale — DESIGN.md.)
+    clean = ~banned_now.any() & (chk_avg == 0)
+    new_state = ProtocolState(
+        step=state.step + 1,
+        key=state.key,
+        active=new_active,
+        validator=next_validator,
+        prev_agg=jnp.where(clean, agg.astype(jnp.float32), 0.0),
+        ban_step=jnp.where(banned_now, state.step, state.ban_step),
+        ban_reason=jnp.where(banned_now, reason, state.ban_reason),
+        accused_count=state.accused_count + accused_inc,
+        last_checked=last_checked,
+        delay_buf=delay_buf,
+    )
+    out = StepOutputs(
+        g_hat=g_hat,
+        seed=seed,
+        banned_now=banned_now,
+        ban_reason_now=reason,
+        accuse_mat=accuse,
+        sys_accuse=sys_accuse,
+        cheated=cheated,
+        checksum_violations=cs_viol,
+        check_averaging=chk_avg,
+        n_active=active.sum().astype(jnp.int32),
+        validators=validator,
+    )
+    return new_state, out
+
+
+@functools.lru_cache(maxsize=32)
+def jit_protocol_step(cfg: EngineConfig):
+    """Jitted single step for the given (static) config."""
+    return jax.jit(functools.partial(protocol_step, cfg))
+
+
+# ---------------------------------------------------------------------------
+# Scanned multi-step runner
+# ---------------------------------------------------------------------------
+def scan_protocol(cfg: EngineConfig, state: ProtocolState, byz_mask, params,
+                  grads_fn: Callable, n_steps: int, update_fn=None):
+    """Run ``n_steps`` protocol rounds under one ``lax.scan`` (no host sync).
+
+    grads_fn(params, t, flip_mask) -> (G, honest_G): pure per-step gradient
+    computation over ALL n peers (banned rows are masked internally).
+    update_fn(params, g_hat, t) -> params: optional optimizer inner step.
+    Returns (final_state, final_params, stacked StepOutputs).
+    """
+    byz = jnp.asarray(byz_mask) > 0
+
+    def body(carry, _):
+        st, p = carry
+        flips = flip_mask(cfg, st, byz)
+        G, honest_G = grads_fn(p, st.step, flips)
+        st, out = protocol_step(cfg, st, byz, G, honest_G)
+        if update_fn is not None:
+            p = update_fn(p, out.g_hat, st.step - 1)
+        return (st, p), out
+
+    (state, params), outs = jax.lax.scan(
+        body, (state, params), None, length=n_steps
+    )
+    return state, params, outs
+
+
+def make_scan_runner(cfg: EngineConfig, grads_fn, n_steps: int,
+                     update_fn=None):
+    """Jitted closure over scan_protocol: fn(state, byz_mask, params)."""
+    return jax.jit(
+        lambda state, byz_mask, params: scan_protocol(
+            cfg, state, byz_mask, params, grads_fn, n_steps, update_fn
+        )
+    )

@@ -1,30 +1,34 @@
-"""BTARD host-level protocol state machine (paper Alg. 4–7).
+"""BTARD host-level protocol API (paper Alg. 4-7) — thin wrapper over the
+jit/scan engine in :mod:`repro.core.engine`.
 
-This is the faithful protocol simulation: sha256 gradient commitments,
-MPRNG commit/reveal for the shared seed, broadcast tables of s / norm
-scalars, Verifications 1–3, ACCUSE (recompute & ban, Alg. 4) and ELIMINATE
-(mutual ban), random validator election, and deterministic ban ordering
-(sorted accusations — App. D.3).
+Historically this module WAS the protocol: a ~170-line host-side numpy loop
+per step (sha256 commitments, MPRNG objects, python accusation lists) that
+round-tripped device arrays every phase. The state machine now lives in
+``engine.protocol_step`` as pure functions over a ``ProtocolState`` pytree;
+this wrapper keeps the legacy object API on top of it:
 
-The numeric aggregation itself (CenteredClip over butterfly partitions) runs
-on device via repro.core.butterfly; everything a real deployment would do in
-host-side RPC / crypto land lives here in plain Python over a simulated
-consistent broadcast channel.
+* arbitrary host-side ``grad_fn(peer, step, params, flipped)`` support
+  (the engine itself takes the stacked (n, d) gradient matrices);
+* the ``StepInfo`` / ``banned`` / ``validators`` bookkeeping, mirrored from
+  the state pytree after each jitted step.
+
+Because the wrapper and ``engine.scan_protocol`` call the *same* step
+function with the same PRNG chain, a scanned N-step run and N ``step()``
+calls produce identical bans, accusations and aggregates — property-tested
+in ``tests/test_engine.py``. The host crypto simulation (sha256 grad_hash,
+commit/reveal MPRNG) remains available in :mod:`repro.core.mprng` and the
+``grad_hash`` helper below; the engine models both by their numeric
+outcome (see engine module docstring).
 """
 from __future__ import annotations
 
-import functools
 import hashlib
 from dataclasses import dataclass, field
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import attacks as attacks_mod
-from repro.core import butterfly as bf
-from repro.core.centered_clip import centered_clip
-from repro.core.mprng import MPRNGPeer, run_mprng
+from repro.core import engine as eng
 
 
 def grad_hash(g: np.ndarray) -> bytes:
@@ -33,7 +37,7 @@ def grad_hash(g: np.ndarray) -> bytes:
 
 @dataclass
 class AttackConfig:
-    kind: str = "none"  # see core.attacks.GRADIENT_ATTACKS
+    kind: str = "none"  # see core.attacks.ATTACK_NAMES
     start_step: int = 0
     end_step: int = 10**9
     lam: float = 1000.0
@@ -63,6 +67,9 @@ class BTARDProtocol:
     grad_fn(peer_id, step, params, flipped) -> np.ndarray (d,)
         Deterministic given (peer_id, step): the paper's public minibatch
         seed xi_i^t, so any peer can recompute any other's gradient.
+
+    All numerics run through ``engine.protocol_step`` (one jitted call per
+    step); this object only computes host gradients and mirrors the state.
     """
 
     def __init__(
@@ -79,6 +86,7 @@ class BTARDProtocol:
         clip_lambda: float | None = None,  # BTARD-Clipped-SGD peer-side clip
         seed: int = 0,
         use_pallas: bool = False,
+        warm_start: bool = False,
     ):
         self.n = n_peers
         self.d = d
@@ -91,28 +99,34 @@ class BTARDProtocol:
         self.delta_max = delta_max
         self.clip_lambda = clip_lambda
         self.use_pallas = use_pallas
-        self.rng = np.random.default_rng(seed)
+
+        self.engine_config = eng.config_from_attack(
+            n_peers,
+            d,
+            self.attack,
+            tau=tau,
+            clip_iters=clip_iters,
+            m_validators=m_validators,
+            delta_max=delta_max,
+            clip_lambda=clip_lambda,
+            use_pallas=use_pallas,
+            warm_start=warm_start,
+        )
+        self.byz_mask = jnp.asarray(
+            [1.0 if i in self.byzantine else 0.0 for i in range(n_peers)],
+            jnp.float32,
+        )
+        self.state = eng.init_state(self.engine_config, seed=seed)
+        self._step_fn = eng.jit_protocol_step(self.engine_config)
+        # host mirrors of the state pytree (legacy API)
         self.banned: set = set()
-        self.validators: list = []  # C_k — chosen at the END of step k-1
-        self._delay_buf: dict = {}
-        self._jit_bclip = jax.jit(
-            lambda g, w: bf.butterfly_clip(
-                g, tau=self.tau, n_iters=self.clip_iters, weights=w
-            )
-        )
-        self._jit_tables = jax.jit(
-            functools.partial(bf.verification_tables, use_pallas=use_pallas)
-        )
-        # fused path: aggregation + broadcast tables in ONE kernel launch of
-        # n_iters + 2 HBM passes (vs the two jitted calls above)
-        self._jit_fused = jax.jit(
-            lambda g, z, w: bf.butterfly_clip_verified(
-                g, tau=self.tau, z=z, n_iters=self.clip_iters, weights=w,
-                use_pallas=True,
-            )
-        )
+        self.validators: list = self._mask_to_list(self.state.validator)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _mask_to_list(mask):
+        return [int(i) for i in np.nonzero(np.asarray(mask) > 0)[0]]
+
     def active_peers(self):
         return [i for i in range(self.n) if i not in self.banned]
 
@@ -125,324 +139,66 @@ class BTARDProtocol:
 
     # ------------------------------------------------------------------
     def _compute_peer_grads(self, params, t, active):
-        """Step 1–2: everyone computes gradients from public seeds; Byzantine
-        peers substitute their attack vectors (and commit to THOSE — an
-        inconsistent commitment would be an instant ELIMINATE)."""
+        """Step 1-2: everyone computes gradients from public seeds. The
+        Byzantine substitutions happen on device (engine apply_attack) —
+        only LABEL FLIP needs the loss, so it is resolved here."""
         flip = self._is_attacking(t) and self.attack.kind == "label_flip"
-        grads, honest = [], []
+        G = np.zeros((self.n, self.d), np.float32)
+        honest_G = np.zeros((self.n, self.d), np.float32)
         for i in active:
             flipped = flip and i in self.byzantine
             g = np.asarray(self.grad_fn(i, t, params, flipped), np.float32)
-            grads.append(g)
+            G[i] = g
             # a validator recomputing from the PUBLIC seed gets true labels:
-            honest.append(
+            honest_G[i] = (
                 np.asarray(self.grad_fn(i, t, params, False), np.float32)
                 if flipped
                 else g
             )
-        G = np.stack(grads)  # (n_active, d)
-        honest_G = np.stack(honest)
-
-        if self._is_attacking(t):
-            byz_mask = np.array([i in self.byzantine for i in active])
-            kind = self.attack.kind
-            if kind in attacks_mod.NEEDS_DELAY_BUFFER:
-                delayed = np.stack(
-                    [
-                        self._delay_buf.get(
-                            (i, t - self.attack.delay),
-                            np.zeros(self.d, np.float32),
-                        )
-                        for i in active
-                    ]
-                )
-                G = np.asarray(
-                    attacks_mod.delayed_gradient(
-                        jnp.asarray(G), jnp.asarray(byz_mask), delayed=jnp.asarray(delayed)
-                    )
-                )
-            elif kind != "label_flip":
-                fn = attacks_mod.GRADIENT_ATTACKS[kind]
-                G = np.asarray(
-                    fn(
-                        jnp.asarray(G),
-                        jnp.asarray(byz_mask),
-                        key=jax.random.key(t),
-                        lam=self.attack.lam,
-                    )
-                )
-        # history for the delayed attack
-        for idx, i in enumerate(active):
-            if i in self.byzantine:
-                self._delay_buf[(i, t)] = honest_G[idx]
-        # drop old history
-        for key in [k for k in self._delay_buf if k[1] < t - self.attack.delay - 2]:
-            del self._delay_buf[key]
         return G, honest_G
 
-    # ------------------------------------------------------------------
-    def _mprng_phase(self, t, active, info):
-        """MPRNG commit/reveal for the shared seed; bans aborters."""
-        peers = [MPRNGPeer(i) for i in active]
-        if self.attack.mprng_abort and self._is_attacking(t):
-            from repro.core.mprng import AbortingPeer
-
-            peers = [
-                AbortingPeer(i) if i in self.byzantine else MPRNGPeer(i)
-                for i in active
-            ]
-        seed, mprng_banned, _ = run_mprng(peers, self.rng)
-        for i in mprng_banned:
-            self._ban(i, info, "mprng abort/mismatch")
-        info.seed = seed % (2**31)
-
-    def _aggregator_attack(self, t, active, agg):
-        """Byzantine aggregators corrupt their partitions in place. Returns
-        the list of corrupted partition indices."""
-        corrupted_parts = []
-        if self._is_attacking(t) and self.attack.aggregator_attack:
-            for j_idx, j in enumerate(active):
-                if j in self.byzantine and self.attack.aggregator_scale > 0:
-                    noise = self.rng.normal(size=agg.shape[1]).astype(np.float32)
-                    noise /= max(np.linalg.norm(noise), 1e-30)
-                    agg[j_idx] = agg[j_idx] + self.attack.aggregator_scale * noise
-                    corrupted_parts.append(j_idx)
-        return corrupted_parts
-
-    def _corrupt_and_hash(self, t, active, agg, parts):
-        """Shared post-aggregation sequence of both paths: writable copies,
-        the aggregator attack, then the broadcast hashes of the (possibly
-        corrupted) aggregation results."""
-        agg = np.array(agg)  # writable copy
-        parts_np = np.asarray(parts)
-        honest_agg = agg.copy()
-        corrupted_parts = self._aggregator_attack(t, active, agg)
-        agg_hashes = {active[j]: grad_hash(agg[j]) for j in range(len(active))}
-        return agg, parts_np, honest_agg, corrupted_parts, agg_hashes
+    def _mirror(self, out: eng.StepOutputs, info: StepInfo):
+        """Copy the step's engine outputs into the legacy bookkeeping."""
+        banned_now = np.asarray(out.banned_now)
+        reasons = np.asarray(out.ban_reason_now)
+        for i in np.nonzero(banned_now)[0]:
+            peer = int(i)
+            if peer not in self.banned:
+                self.banned.add(peer)
+                info.banned_now.append(
+                    (peer, eng.BAN_REASON_NAMES[int(reasons[i])])
+                )
+        acc = np.asarray(out.accuse_mat)
+        sys_acc = np.asarray(out.sys_accuse)
+        cheated = np.asarray(out.cheated)
+        for v, u in zip(*np.nonzero(acc)):
+            guilty = [int(u)] if cheated[u] else [int(v)]
+            info.accusations.append(
+                (int(v), int(u), "engine accusation", guilty)
+            )
+        for j in np.nonzero(sys_acc)[0]:
+            guilty = [int(j)] if cheated[j] else []
+            info.accusations.append(
+                (None, int(j), "checksum/Delta_max (V2/V3)", guilty)
+            )
+        info.checksum_violations = int(out.checksum_violations)
+        info.check_averaging = int(out.check_averaging)
+        info.seed = int(out.seed)
+        info.n_active = int(out.n_active)
+        info.validators = self._mask_to_list(out.validators)
+        self.validators = self._mask_to_list(self.state.validator)
 
     # ------------------------------------------------------------------
     def step(self, params, t):
         """One BTARD-SGD aggregation round. Returns (g_hat (d,), StepInfo)."""
         info = StepInfo(step=t)
+        if int(self.state.step) != t:
+            # honour the caller's step index (attack windows, PRNG chain)
+            self.state = self.state._replace(step=jnp.asarray(t, jnp.int32))
         active = self.active_peers()
-        n_act = len(active)
-        info.n_active = n_act
-        validators = [v for v in self.validators if v not in self.banned]
-        info.validators = list(validators)
-        # weight 0 for this step's validators (they validate instead — Alg. 1 L19)
-        weights = np.array(
-            [0.0 if i in validators else 1.0 for i in active], np.float32
-        )
-
         G, honest_G = self._compute_peer_grads(params, t, active)
-        G = np.array(G)  # ensure writable (attack outputs are jax views)
-        honest_G = np.array(honest_G)
-        if self.clip_lambda is not None:  # BTARD-Clipped-SGD (Alg. 9, honest peers)
-            for idx, i in enumerate(active):
-                if i not in self.byzantine:
-                    nrm = np.linalg.norm(G[idx])
-                    G[idx] *= min(1.0, self.clip_lambda / max(nrm, 1e-30))
-                    honest_G[idx] = G[idx]
-
-        # ---- commitments (broadcast BEFORE any aggregation data flows) ----
-        commitments = {i: grad_hash(G[idx]) for idx, i in enumerate(active)}
-
-        if self.use_pallas:
-            # Fused path (kernels/DESIGN.md): the MPRNG commit/reveal runs
-            # first so z is available to the fused kernel, which then emits
-            # the aggregate AND the broadcast tables from one pallas_call of
-            # n_iters + 2 HBM passes. On the wire z is revealed only after
-            # the aggregate hashes are committed; the simulated attackers are
-            # scripted and never adapt to z, and the MPRNG output does not
-            # depend on the aggregate, so the reorder is behaviorally
-            # identical (the host rng draw order differs from the two-call
-            # path only when aggregator_attack also draws from it).
-            self._mprng_phase(t, active, info)
-            part = bf.pad_to_parts(self.d, n_act) // n_act
-            z = np.asarray(bf.get_random_directions(info.seed, n_act, part))
-            agg, parts, s_tbl, norm_tbl = self._jit_fused(
-                jnp.asarray(G), jnp.asarray(z), jnp.asarray(weights)
-            )
-            agg, parts_np, honest_agg, corrupted_parts, agg_hashes = (
-                self._corrupt_and_hash(t, active, agg, parts)
-            )
-            if corrupted_parts:
-                # honest peers received the CORRUPTED aggregate, so their
-                # reported tables are computed against it — one standalone
-                # table pass, paid only on attacked steps
-                s_tbl, norm_tbl = self._jit_tables(
-                    jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z),
-                    self.tau,
-                )
-        else:
-            # ---- butterfly exchange + per-partition CenteredClip, then the
-            # hash of aggregation results, broadcast BEFORE z is known ------
-            agg, parts = self._jit_bclip(jnp.asarray(G), jnp.asarray(weights))
-            agg, parts_np, honest_agg, corrupted_parts, agg_hashes = (
-                self._corrupt_and_hash(t, active, agg, parts)
-            )
-
-            # ---- MPRNG: shared seed (commit/reveal) ------------------------
-            self._mprng_phase(t, active, info)
-            z = np.asarray(
-                bf.get_random_directions(info.seed, agg.shape[0], agg.shape[1])
-            )
-
-            # ---- broadcast tables s_i^j, norm_ij ---------------------------
-            s_tbl, norm_tbl = self._jit_tables(
-                jnp.asarray(parts_np), jnp.asarray(agg), jnp.asarray(z), self.tau
-            )
-        s_tbl = np.asarray(s_tbl).copy()  # (n_act, n_parts)
-        norm_tbl = np.asarray(norm_tbl).copy()
-        true_s = s_tbl.copy()
-        true_norm = norm_tbl.copy()
-
-        # colluders cancel the checksum for corrupted partitions (App. C:
-        # "Byzantines can misreport s_i^j such that sum_i s_i^j = 0")
-        misreporters = []
-        if corrupted_parts and self.attack.misreport_s:
-            byz_rows = [
-                idx for idx, i in enumerate(active) if i in self.byzantine
-            ]
-            for j_idx in corrupted_parts:
-                liar = byz_rows[0]
-                others = (s_tbl[:, j_idx] * weights).sum() - s_tbl[liar, j_idx] * weights[liar]
-                if weights[liar] > 0:
-                    s_tbl[liar, j_idx] = -others / weights[liar]
-                    misreporters.append((active[liar], active[j_idx]))
-
-        # ---- Verifications --------------------------------------------------
-        accusations = []  # (accuser, target, reason)
-
-        # V1: each aggregator j can verify everyone's norm for its partition
-        for j_idx, j in enumerate(active):
-            if j in self.byzantine:
-                continue  # byzantine aggregators stay silent
-            bad = np.nonzero(
-                np.abs(norm_tbl[:, j_idx] - true_norm[:, j_idx])
-                > 1e-4 * (1.0 + true_norm[:, j_idx])
-            )[0]
-            for i_idx in bad:
-                accusations.append((j, active[i_idx], "norm mismatch (V1)"))
-
-        # V2a: each aggregator j verifies everyone's s for its partition
-        for j_idx, j in enumerate(active):
-            if j in self.byzantine:
-                continue
-            bad = np.nonzero(
-                np.abs(s_tbl[:, j_idx] - true_s[:, j_idx])
-                > 1e-4 * (1.0 + np.abs(true_s[:, j_idx]))
-            )[0]
-            for i_idx in bad:
-                accusations.append((j, active[i_idx], "s mismatch (V2)"))
-
-        # V2b: global checksum per partition
-        tol = float(
-            bf.checksum_tolerance(jnp.asarray(agg), jnp.asarray(parts_np))
+        self.state, out = self._step_fn(
+            self.state, self.byz_mask, jnp.asarray(G), jnp.asarray(honest_G)
         )
-        sums = (s_tbl * weights[:, None]).sum(0)
-        for j_idx in np.nonzero(np.abs(sums) > tol)[0]:
-            info.checksum_violations += 1
-            accusations.append((None, active[j_idx], "checksum != 0 (V2)"))
-
-        # V3: Delta_max majority vote -> CHECKAVERAGING
-        if self.delta_max is not None:
-            votes = ((true_norm > self.delta_max) * weights[:, None]).sum(0)
-            for j_idx in np.nonzero(votes > weights.sum() / 2.0)[0]:
-                info.check_averaging += 1
-                accusations.append(
-                    (None, active[j_idx], "Delta_max majority (V3)")
-                )
-
-        # ---- validator checks (C_k elected by last step's MPRNG) ------------
-        targets = self._choose_targets(info.seed - 1, active, validators)
-        for v, u in targets.items():
-            if v in self.byzantine:
-                if self._is_attacking(t) and self.attack.false_accuse:
-                    accusations.append((v, u, "false accusation"))
-                continue  # silent byzantine validator
-            u_idx = active.index(u)
-            honest = honest_G[u_idx]
-            if grad_hash(G[u_idx]) != grad_hash(honest) or not np.allclose(
-                G[u_idx], honest
-            ):
-                accusations.append((v, u, "gradient hash mismatch (validator)"))
-            elif np.abs(s_tbl[u_idx] - true_s[u_idx]).max() > 1e-4 * (
-                1.0 + np.abs(true_s[u_idx]).max()
-            ):
-                accusations.append((v, u, "s mismatch (validator)"))
-
-        # ---- ACCUSE resolution (deterministic order, App. D.3) --------------
-        for accuser, target, reason in sorted(
-            accusations, key=lambda a: (a[1], -1 if a[0] is None else a[0], a[2])
-        ):
-            if target in self.banned or (accuser is not None and accuser in self.banned):
-                continue
-            guilty = self._resolve_accusation(
-                accuser, target, reason, active, G, honest_G,
-                agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
-            )
-            info.accusations.append((accuser, target, reason, guilty))
-            for g in guilty:
-                self._ban(g, info, reason)
-
-        # ---- elect next validators ------------------------------------------
-        self.validators = self._elect_validators(info.seed, self.active_peers())
-
-        g_hat = bf.merge_parts(jnp.asarray(agg), self.d)
-        return np.asarray(g_hat), info
-
-    # ------------------------------------------------------------------
-    def _resolve_accusation(
-        self, accuser, target, reason, active, G, honest_G,
-        agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
-    ):
-        """ACCUSE (Alg. 4): everyone recomputes the target's work from the
-        public seed. Returns the set of peers proven guilty (the target if
-        the accusation holds, else the accuser). A false accusation bans the
-        accuser (Hammurabi rule)."""
-        t_idx = active.index(target)
-        guilty = set()
-        target_cheated = (
-            not np.allclose(G[t_idx], honest_G[t_idx])  # gradient attack
-            or not np.allclose(s_tbl[t_idx], true_s[t_idx], atol=1e-5, rtol=1e-3)
-            or not np.allclose(norm_tbl[t_idx], true_norm[t_idx], atol=1e-5, rtol=1e-3)
-            or not np.allclose(agg[t_idx], honest_agg[t_idx])  # aggregation attack
-        )
-        if target_cheated:
-            guilty.add(target)
-            # "and everyone who covered it up" (Alg. 4 L11-13): peers whose
-            # reported s for the corrupted partition mismatches their true s
-            liars = np.nonzero(
-                np.abs(s_tbl[:, t_idx] - true_s[:, t_idx])
-                > 1e-4 * (1.0 + np.abs(true_s[:, t_idx]))
-            )[0]
-            for l_idx in liars:
-                guilty.add(active[l_idx])
-        elif accuser is not None:
-            guilty.add(accuser)
-        return guilty
-
-    def _ban(self, peer, info, reason):
-        if peer not in self.banned:
-            self.banned.add(peer)
-            info.banned_now.append((peer, reason))
-
-    # ------------------------------------------------------------------
-    def _elect_validators(self, seed, active):
-        if not active or self.m == 0:
-            return []
-        r = np.random.default_rng(seed & 0x7FFFFFFF)
-        m = min(self.m, max(0, len(active) - 1))
-        return list(r.choice(active, size=m, replace=False))
-
-    def _choose_targets(self, seed, active, validators):
-        """CHOOSETARGET(r, i): each validator checks one non-validator."""
-        cands = [i for i in active if i not in validators]
-        if not cands:
-            return {}
-        r = np.random.default_rng((seed + 12345) & 0x7FFFFFFF)
-        out = {}
-        for v in validators:
-            out[v] = int(r.choice(cands))
-        return out
+        self._mirror(out, info)
+        return np.asarray(out.g_hat), info

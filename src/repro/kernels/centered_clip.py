@@ -52,8 +52,10 @@ DEFAULT_BLOCK = 512
 def _cc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
     """Grid (n_iters, 2, n_blocks).
 
-    taus: (n_iters, 1) SMEM-ish small input; w: (n, 1) peer weights;
-    xs: (n, blk) tile; v/out: (1, blk) aliased; scratch sq/cw: (n, 1) f32.
+    taus: (n_iters, 1) in SMEM (whole schedule, indexed by the pass id —
+    a (1, 1) VMEM block would violate the TPU (8, 128) tile minimum);
+    w: (n, 1) peer weights; xs: (n, blk) tile; v/out: (1, blk) aliased;
+    scratch sq/cw: (n, 1) f32.
     """
     it = pl.program_id(0)
     phase = pl.program_id(1)
@@ -78,7 +80,7 @@ def _cc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
     def _phase_update():
         @pl.when(blk == 0)
         def _weights():
-            tau = taus_ref[0, 0]
+            tau = taus_ref[it, 0]
             norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
             cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
             cw = jnp.where(jnp.isinf(tau), 1.0, cw)
@@ -91,9 +93,14 @@ def _cc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
 
 
 def centered_clip_pallas(
-    xs, taus, weights=None, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+    xs, taus, weights=None, v0=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
 ):
-    """CenteredClip via the Pallas kernel. xs: (n, d) -> v: (d,) f32."""
+    """CenteredClip via the Pallas kernel. xs: (n, d) -> v: (d,) f32.
+
+    v0: optional (d,) warm start — flows straight into the kernel's v ref
+    (the iteration state), zero extra HBM traffic.
+    """
     n, d = xs.shape
     n_iters = int(taus.shape[0])
     if weights is None:
@@ -102,17 +109,23 @@ def centered_clip_pallas(
     dp = -(-d // blk) * blk
     if dp != d:
         xs = jnp.pad(xs, ((0, 0), (0, dp - d)))
+        if v0 is not None:
+            v0 = jnp.pad(v0, (0, dp - d))
     n_blocks = dp // blk
 
     taus2 = taus.reshape(n_iters, 1).astype(jnp.float32)
     w2 = weights.reshape(n, 1).astype(jnp.float32)
-    v0 = jnp.zeros((1, dp), jnp.float32)
+    v0 = (
+        jnp.zeros((1, dp), jnp.float32)
+        if v0 is None
+        else v0.reshape(1, dp).astype(jnp.float32)
+    )
 
     out = pl.pallas_call(
         _cc_kernel,
         grid=(n_iters, 2, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, p, b: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((n, 1), lambda i, p, b: (0, 0)),
             pl.BlockSpec((n, blk), lambda i, p, b: (0, b)),
             pl.BlockSpec((1, blk), lambda i, p, b: (0, b)),
@@ -135,6 +148,11 @@ def centered_clip_pallas(
 # each partition's first grid step)
 # ===========================================================================
 def _bcc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
+    """Like _cc_kernel with a leading partition grid axis. v/out carry a
+    singleton sublane dim — (n_parts, 1, dp) with (1, 1, blk) blocks — so
+    the native TPU lowering sees a legal (1, blk) tile instead of a (1, blk)
+    slice of a (n_parts, dp) array (sublane dim must divide 8 or equal the
+    array dim)."""
     it = pl.program_id(1)
     phase = pl.program_id(2)
     blk = pl.program_id(3)
@@ -143,37 +161,38 @@ def _bcc_kernel(taus_ref, w_ref, xs_ref, v_ref, out_ref, sq_ref, cw_ref):
     def _phase_norms():
         @pl.when(it == 0)
         def _copy_in():
-            out_ref[...] = v_ref[...]
+            out_ref[0] = v_ref[0]
 
         @pl.when(blk == 0)
         def _reset():
             sq_ref[...] = jnp.zeros_like(sq_ref)
 
-        diff = xs_ref[0].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        diff = xs_ref[0].astype(jnp.float32) - out_ref[0].astype(jnp.float32)
         sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
 
     @pl.when(phase == 1)
     def _phase_update():
         @pl.when(blk == 0)
         def _weights():
-            tau = taus_ref[0, 0]
+            tau = taus_ref[it, 0]
             norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
             cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
             cw = jnp.where(jnp.isinf(tau), 1.0, cw)
             cw_ref[...] = cw * w_ref[...].astype(jnp.float32)
 
         wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
-        diff = xs_ref[0].astype(jnp.float32) - out_ref[...].astype(jnp.float32)
+        diff = xs_ref[0].astype(jnp.float32) - out_ref[0].astype(jnp.float32)
         upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
-        out_ref[...] = out_ref[...] + upd
+        out_ref[0] = out_ref[0] + upd
 
 
 def butterfly_clip_pallas(
-    parts, taus, weights=None, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+    parts, taus, weights=None, v0=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
 ):
     """All-partition CenteredClip: parts (n_parts, n_peers, part) -> the
     robust aggregate (n_parts, part) f32 — i.e. ButterflyClip's aggregation
-    stage as a single fused kernel."""
+    stage as a single fused kernel. v0: optional (n_parts, part) warm start."""
     n_parts, n, d = parts.shape
     n_iters = int(taus.shape[0])
     if weights is None:
@@ -182,30 +201,36 @@ def butterfly_clip_pallas(
     dp = -(-d // blk) * blk
     if dp != d:
         parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        if v0 is not None:
+            v0 = jnp.pad(v0, ((0, 0), (0, dp - d)))
     n_blocks = dp // blk
 
     taus2 = taus.reshape(n_iters, 1).astype(jnp.float32)
     w2 = weights.reshape(n, 1).astype(jnp.float32)
-    v0 = jnp.zeros((n_parts, dp), jnp.float32)
+    v0 = (
+        jnp.zeros((n_parts, 1, dp), jnp.float32)
+        if v0 is None
+        else v0.astype(jnp.float32).reshape(n_parts, 1, dp)
+    )
 
     out = pl.pallas_call(
         _bcc_kernel,
         grid=(n_parts, n_iters, 2, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda p, i, ph, b: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((n, 1), lambda p, i, ph, b: (0, 0)),
             pl.BlockSpec((1, n, blk), lambda p, i, ph, b: (p, 0, b)),
-            pl.BlockSpec((1, blk), lambda p, i, ph, b: (p, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, ph, b: (p, 0, b)),
         ],
-        out_specs=pl.BlockSpec((1, blk), lambda p, i, ph, b: (p, b)),
-        out_shape=jax.ShapeDtypeStruct((n_parts, dp), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, blk), lambda p, i, ph, b: (p, 0, b)),
+        out_shape=jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((n, 1), jnp.float32),
             pltpu.VMEM((n, 1), jnp.float32),
         ],
         interpret=interpret,
     )(taus2, w2, parts, v0)
-    return out[:, :d]
+    return out[:, 0, :d]
 
 
 # ===========================================================================
@@ -230,29 +255,40 @@ def _fused_body(
     batched, taus_ref, tauv_ref, w_ref, xs_ref, v_ref, z_ref,
     out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref,
 ):
+    """taus/tauv live in SMEM (whole schedule, indexed by the pass id); in
+    the batched variant v/z/out/s/norm carry a singleton sublane dim (see
+    _bcc_kernel) so every VMEM block satisfies the TPU tiling rules."""
     off = 1 if batched else 0
     it = pl.program_id(off + 0)
     blk = pl.program_id(off + 1)
     n_upd = pl.num_programs(off + 0) - 2
     nb = pl.num_programs(off + 1)
     xs = (xs_ref[0] if batched else xs_ref[...]).astype(jnp.float32)
+    # 2D (1, blk) views of the possibly 3D-blocked refs
+    vget = (lambda r: r[0]) if batched else (lambda r: r[...])
+
+    def out_set(val):
+        if batched:
+            out_ref[0] = val
+        else:
+            out_ref[...] = val
 
     @pl.when(it == 0)
     def _prologue():
-        out_ref[...] = v_ref[...].astype(jnp.float32)
+        out_set(vget(v_ref).astype(jnp.float32))
 
         @pl.when(blk == 0)
         def _reset():
             sq_ref[...] = jnp.zeros_like(sq_ref)
 
-        diff = xs - out_ref[...]
+        diff = xs - vget(out_ref)
         sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
 
     @pl.when(jnp.logical_and(it >= 1, it <= n_upd))
     def _update():
         @pl.when(blk == 0)
         def _weights():
-            tau = taus_ref[0, 0]
+            tau = taus_ref[it, 0]
             norms = jnp.sqrt(jnp.maximum(sq_ref[...], 1e-30))
             cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
             cw = jnp.where(jnp.isinf(tau), 1.0, cw)
@@ -260,9 +296,9 @@ def _fused_body(
             sq_ref[...] = jnp.zeros_like(sq_ref)  # accumulates iter l+1 norms
 
         wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
-        diff = xs - out_ref[...]
+        diff = xs - vget(out_ref)
         upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
-        out_ref[...] = out_ref[...] + upd
+        out_set(vget(out_ref) + upd)
         nd = diff - upd  # x_i - v_{l+1} restricted to this block
         sq_ref[...] += jnp.sum(nd * nd, axis=1, keepdims=True)
 
@@ -272,8 +308,8 @@ def _fused_body(
         def _reset_dot():
             dot_ref[...] = jnp.zeros_like(dot_ref)
 
-        diff = xs - out_ref[...]
-        dot_ref[...] += jnp.sum(diff * z_ref[...].astype(jnp.float32),
+        diff = xs - vget(out_ref)
+        dot_ref[...] += jnp.sum(diff * vget(z_ref).astype(jnp.float32),
                                 axis=1, keepdims=True)
 
         @pl.when(blk == nb - 1)
@@ -282,8 +318,13 @@ def _fused_body(
             norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
             cwv = jnp.minimum(1.0, tau_v / jnp.maximum(norms, 1e-30))
             cwv = jnp.where(jnp.isinf(tau_v), 1.0, cwv)
-            s_ref[...] = (cwv * dot_ref[...]).reshape(s_ref.shape)
-            norm_ref[...] = norms.reshape(norm_ref.shape)
+            s = cwv * dot_ref[...]  # (n, 1)
+            if batched:
+                s_ref[0] = s.reshape(s_ref.shape[1:])
+                norm_ref[0] = norms.reshape(norm_ref.shape[1:])
+            else:
+                s_ref[...] = s.reshape(s_ref.shape)
+                norm_ref[...] = norms.reshape(norm_ref.shape)
 
 
 def _pad_taus(taus, n_iters):
@@ -294,13 +335,14 @@ def _pad_taus(taus, n_iters):
 
 
 def centered_clip_fused_pallas(
-    xs, taus, z, tau_v=None, weights=None, *,
+    xs, taus, z, tau_v=None, weights=None, v0=None, *,
     block: int = DEFAULT_BLOCK, interpret: bool = True,
 ):
     """Fused CenteredClip + verification tables in n_iters + 2 passes of x.
 
     xs: (n, d); taus: (n_iters,); z: (d,) unit direction for the epilogue.
     tau_v defaults to taus[-1] (the protocol uses a constant schedule).
+    v0: optional (d,) warm start (previous aggregate).
     Returns (v (d,), s (n,), norms (n,)) f32.
     """
     n, d = xs.shape
@@ -314,18 +356,24 @@ def centered_clip_fused_pallas(
     if dp != d:
         xs = jnp.pad(xs, ((0, 0), (0, dp - d)))
         z = jnp.pad(z, (0, dp - d))
+        if v0 is not None:
+            v0 = jnp.pad(v0, (0, dp - d))
     n_blocks = dp // blk
 
     tauv2 = jnp.asarray(tau_v, jnp.float32).reshape(1, 1)
     w2 = weights.reshape(n, 1).astype(jnp.float32)
-    v0 = jnp.zeros((1, dp), jnp.float32)
+    v0 = (
+        jnp.zeros((1, dp), jnp.float32)
+        if v0 is None
+        else v0.reshape(1, dp).astype(jnp.float32)
+    )
 
     out, s, norms = pl.pallas_call(
         functools.partial(_fused_body, False),
         grid=(n_iters + 2, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, b: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, b: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((n, 1), lambda i, b: (0, 0)),
             pl.BlockSpec((n, blk), lambda i, b: (0, b)),
             pl.BlockSpec((1, blk), lambda i, b: (0, b)),
@@ -352,13 +400,14 @@ def centered_clip_fused_pallas(
 
 
 def butterfly_clip_fused_pallas(
-    parts, taus, z, tau_v=None, weights=None, *,
+    parts, taus, z, tau_v=None, weights=None, v0=None, *,
     block: int = DEFAULT_BLOCK, interpret: bool = True,
 ):
     """All-partition fused ButterflyClip: the whole robust aggregation AND
     the Alg. 6 broadcast tables in ONE pallas_call of n_iters + 2 passes.
 
     parts: (n_parts, n_peers, part); z: (n_parts, part).
+    v0: optional (n_parts, part) warm start (previous aggregate).
     Returns (agg (n_parts, part), s (n_parts, n), norms (n_parts, n)) f32.
     """
     n_parts, n, d = parts.shape
@@ -372,32 +421,38 @@ def butterfly_clip_fused_pallas(
     if dp != d:
         parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
         z = jnp.pad(z, ((0, 0), (0, dp - d)))
+        if v0 is not None:
+            v0 = jnp.pad(v0, ((0, 0), (0, dp - d)))
     n_blocks = dp // blk
 
     tauv2 = jnp.asarray(tau_v, jnp.float32).reshape(1, 1)
     w2 = weights.reshape(n, 1).astype(jnp.float32)
-    v0 = jnp.zeros((n_parts, dp), jnp.float32)
+    v0 = (
+        jnp.zeros((n_parts, 1, dp), jnp.float32)
+        if v0 is None
+        else v0.astype(jnp.float32).reshape(n_parts, 1, dp)
+    )
 
     out, s, norms = pl.pallas_call(
         functools.partial(_fused_body, True),
         grid=(n_parts, n_iters + 2, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda p, i, b: (i, 0)),
-            pl.BlockSpec((1, 1), lambda p, i, b: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((n, 1), lambda p, i, b: (0, 0)),
             pl.BlockSpec((1, n, blk), lambda p, i, b: (p, 0, b)),
-            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
-            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
         ],
         out_specs=[
-            pl.BlockSpec((1, blk), lambda p, i, b: (p, b)),
-            pl.BlockSpec((1, n), lambda p, i, b: (p, 0)),
-            pl.BlockSpec((1, n), lambda p, i, b: (p, 0)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, n), lambda p, i, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, i, b: (p, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_parts, dp), jnp.float32),
-            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
-            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((n, 1), jnp.float32),
@@ -405,8 +460,9 @@ def butterfly_clip_fused_pallas(
             pltpu.VMEM((n, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(_pad_taus(taus, n_iters), tauv2, w2, parts, v0, z)
-    return out[:, :d], s, norms
+    )(_pad_taus(taus, n_iters), tauv2, w2, parts, v0,
+      z.reshape(n_parts, 1, dp))
+    return out[:, 0, :d], s[:, 0], norms[:, 0]
 
 
 # ===========================================================================
@@ -484,7 +540,8 @@ def _vt_batched_kernel(
 ):
     """Grid (n_parts, n_blocks) — verify_tables for every partition in one
     pallas_call (the recompute path when the aggregate changed after the
-    fused kernel ran, e.g. a corrupted aggregator)."""
+    fused kernel ran, e.g. a corrupted aggregator). v/z/s/norm carry a
+    singleton sublane dim for legal native TPU tiles (see _bcc_kernel)."""
     blk = pl.program_id(1)
     nb = pl.num_programs(1)
 
@@ -493,8 +550,8 @@ def _vt_batched_kernel(
         dot_ref[...] = jnp.zeros_like(dot_ref)
         sq_ref[...] = jnp.zeros_like(sq_ref)
 
-    diff = xs_ref[0].astype(jnp.float32) - v_ref[...].astype(jnp.float32)
-    zb = z_ref[...].astype(jnp.float32)
+    diff = xs_ref[0].astype(jnp.float32) - v_ref[0].astype(jnp.float32)
+    zb = z_ref[0].astype(jnp.float32)
     dot_ref[...] += jnp.sum(diff * zb, axis=1, keepdims=True)
     sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
 
@@ -503,8 +560,8 @@ def _vt_batched_kernel(
         tau = tau_ref[0, 0]
         norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
         cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
-        s_ref[...] = (cw * dot_ref[...]).reshape(s_ref.shape)
-        norm_ref[...] = norms.reshape(norm_ref.shape)
+        s_ref[0] = (cw * dot_ref[...]).reshape(s_ref.shape[1:])
+        norm_ref[0] = norms.reshape(norm_ref.shape[1:])
 
 
 def verify_tables_batched_pallas(
@@ -529,23 +586,23 @@ def verify_tables_batched_pallas(
         _vt_batched_kernel,
         grid=(n_parts, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda p, b: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, n, blk), lambda p, b: (p, 0, b)),
-            pl.BlockSpec((1, blk), lambda p, b: (p, b)),
-            pl.BlockSpec((1, blk), lambda p, b: (p, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
         ],
         out_specs=[
-            pl.BlockSpec((1, n), lambda p, b: (p, 0)),
-            pl.BlockSpec((1, n), lambda p, b: (p, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, b: (p, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
-            jax.ShapeDtypeStruct((n_parts, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((n, 1), jnp.float32),
             pltpu.VMEM((n, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(tau2, parts, agg, z)
-    return s, norms
+    )(tau2, parts, agg.reshape(n_parts, 1, dp), z.reshape(n_parts, 1, dp))
+    return s[:, 0], norms[:, 0]

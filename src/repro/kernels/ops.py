@@ -17,11 +17,14 @@ _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "block"))
-def centered_clip_op(xs, tau, weights=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK):
-    """Kernel-backed CenteredClip: xs (n, d), scalar tau -> (d,) f32."""
+def centered_clip_op(
+    xs, tau, weights=None, v0=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+):
+    """Kernel-backed CenteredClip: xs (n, d), scalar tau -> (d,) f32.
+    v0: optional (d,) warm start (previous aggregate)."""
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
     return _k.centered_clip_pallas(
-        xs, taus, weights, block=block, interpret=_INTERPRET
+        xs, taus, weights, v0, block=block, interpret=_INTERPRET
     )
 
 
@@ -32,11 +35,16 @@ def verify_tables_op(xs, v, z, tau, *, block: int = _k.DEFAULT_BLOCK):
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "block"))
-def butterfly_clip_op(parts, tau, weights=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK):
+def butterfly_clip_op(
+    parts, tau, weights=None, v0=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+):
     """Kernel-backed all-partition ButterflyClip aggregation:
-    parts (n_parts, n_peers, part) -> (n_parts, part)."""
+    parts (n_parts, n_peers, part) -> (n_parts, part).
+    v0: optional (n_parts, part) warm start (previous aggregate)."""
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
-    return _k.butterfly_clip_pallas(parts, taus, weights, block=block, interpret=_INTERPRET)
+    return _k.butterfly_clip_pallas(
+        parts, taus, weights, v0, block=block, interpret=_INTERPRET
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -45,29 +53,33 @@ def butterfly_clip_op(parts, tau, weights=None, *, n_iters: int = 20, block: int
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("n_iters", "block"))
 def centered_clip_fused_op(
-    xs, tau, z, weights=None, tau_v=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+    xs, tau, z, weights=None, tau_v=None, v0=None, *,
+    n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
 ):
     """Fused CenteredClip + Alg. 6 tables: xs (n, d), z (d,) ->
-    (agg (d,), s (n,), norms (n,))."""
+    (agg (d,), s (n,), norms (n,)). v0: optional (d,) warm start."""
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
     return _k.centered_clip_fused_pallas(
-        xs, taus, z, tau_v=tau_v, weights=weights, block=block, interpret=_INTERPRET
+        xs, taus, z, tau_v=tau_v, weights=weights, v0=v0,
+        block=block, interpret=_INTERPRET,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "block"))
 def butterfly_clip_fused_op(
-    parts, tau, z, weights=None, tau_v=None, *, n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+    parts, tau, z, weights=None, tau_v=None, v0=None, *,
+    n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
 ):
     """Fused all-partition ButterflyClip aggregation + broadcast tables:
     parts (n_parts, n_peers, part), z (n_parts, part) ->
     (agg (n_parts, part), s (n_peers, n_parts), norms (n_peers, n_parts)).
 
     s/norms come back transposed to the (peer, partition) layout of
-    core.butterfly.verification_tables."""
+    core.butterfly.verification_tables. v0: optional warm start."""
     taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
     agg, s, norms = _k.butterfly_clip_fused_pallas(
-        parts, taus, z, tau_v=tau_v, weights=weights, block=block, interpret=_INTERPRET
+        parts, taus, z, tau_v=tau_v, weights=weights, v0=v0,
+        block=block, interpret=_INTERPRET,
     )
     return agg, s.T, norms.T
 

@@ -125,9 +125,31 @@ def _unflatten_local(vec, leaves):
     return out
 
 
+def _collapse_peer_mesh(mesh):
+    """Collapse multi-axis peer meshes (pod x data) into ONE manual axis.
+
+    jaxlib 0.4.37's SPMD partitioner RET_CHECKs ("Incompatible manual
+    sharding ... aligned.has_value()") on partial-manual shard_map regions
+    whose manual set spans MULTIPLE mesh axes next to an auto 'model' axis;
+    a single manual axis is the well-trodden code path. Device order under
+    P(('pod', 'data')) equals P('peers') on the reshaped mesh (pod-major),
+    so caller-side shardings built on the original mesh stay compatible.
+    Returns (mesh, peer_axes)."""
+    peer_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if len(peer_axes) <= 1:
+        return mesh, peer_axes
+    from jax.sharding import Mesh
+
+    other = tuple(a for a in mesh.axis_names if a not in peer_axes)
+    perm = [mesh.axis_names.index(a) for a in peer_axes + other]
+    devs = np.transpose(mesh.devices, perm)
+    devs = devs.reshape((-1,) + devs.shape[len(peer_axes):])
+    return Mesh(devs, ("peers",) + other), ("peers",)
+
+
 def butterfly_stage(
     g_vec, peer_axes, n_peers, tau, clip_iters, weights, seed, use_pallas=False,
-    delta_max=None,
+    delta_max=None, v0_full=None,
 ):
     """Fully-manual-region butterfly robust all-reduce of one local gradient
     vector. Returns (aggregated vector, verification dict).
@@ -135,6 +157,10 @@ def butterfly_stage(
     The local (model-shard) gradient vector is split into n_peers partitions;
     partition j is robustly aggregated by peer j (all_to_all), exactly
     Alg. 2 with partitions laid out over the TPU peer axis.
+
+    v0_full: optional (d,) previous aggregated vector (replicated — every
+    peer holds it after last step's all_gather); each peer warm-starts its
+    partition's CenteredClip from its slice, cutting clip_iters (DESIGN.md).
     """
     d = g_vec.shape[0]
     part = -(-d // n_peers)
@@ -156,16 +182,26 @@ def butterfly_stage(
     z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), my_idx), (part,))
     z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
 
+    v0 = None
+    if v0_full is not None:
+        if pad:
+            v0_full = jnp.concatenate(
+                [v0_full, jnp.zeros((pad,), v0_full.dtype)]
+            )
+        v0 = v0_full.reshape(n_peers, part)[my_idx].astype(jnp.float32)
+
     if use_pallas:
         from repro.kernels.ops import centered_clip_fused_op
 
         # fused one-pass-per-iteration kernel: aggregate + s_i = <z, Delta_i>
         # + ||x_i - v|| in n_iters + 2 HBM passes of the peer stack
         agg, s_local, norms_local = centered_clip_fused_op(
-            recv, tau, z.astype(jnp.float32), weights, n_iters=clip_iters
+            recv, tau, z.astype(jnp.float32), weights, v0=v0, n_iters=clip_iters
         )
     else:
-        agg = centered_clip(recv, tau=tau, n_iters=clip_iters, weights=weights)
+        agg = centered_clip(
+            recv, tau=tau, n_iters=clip_iters, weights=weights, v0=v0
+        )
         agg = agg.astype(jnp.float32)
         deltas = clip_residuals(recv.astype(jnp.float32), agg, tau)
         s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
@@ -220,7 +256,7 @@ def device_attack(grads_vec, byz_mask, peer_axes, kind, key, lam=100.0):
 # ===========================================================================
 # BTARD distributed train step
 # ===========================================================================
-def make_btard_train_step(
+def _build_btard_step(
     model: Model,
     optimizer,
     mesh,
@@ -232,19 +268,18 @@ def make_btard_train_step(
     delta_max: float | None = 1e9,
     zero1: bool = True,
     transport_dtype=jnp.float32,
+    warm_start: bool = False,
 ):
-    """Returns (jitted step, abstract args).
+    """Shared construction for the single-step and scanned BTARD steps.
 
-    step(params, opt_state, batch, step_idx, seed, byz_mask, weights)
-      -> (params, opt_state, metrics)
-    Params are replicated over the peer axes (each peer = full replica,
-    model-sharded over 'model'); optimizer state is ZeRO-1-sharded over
-    'data' when zero1 (the butterfly partition owner updates its shard —
-    exactly Alg. 7's per-partition ownership).
+    Returns (step_core, mesh, specs dict, abstract args) where
+    step_core(params, opt_state, batch, step, seed, byz_mask, weights,
+    v_prev) -> (params, opt_state, metrics, verif, v_agg); v_prev / v_agg
+    is the flattened previous/current aggregate (the warm-start carry).
     """
+    mesh, peer_axes = _collapse_peer_mesh(mesh)
     set_mesh(mesh)
     cfg = model.cfg
-    peer_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_peers = int(np.prod([mesh.shape[a] for a in peer_axes]))
 
     params_abs = model.abstract_params()
@@ -286,16 +321,20 @@ def make_btard_train_step(
     )
 
     # ---- stage 2: butterfly robust all-reduce (fully manual) ---------------
-    def butterfly_all(grads, seed, byz_mask, weights, key):
+    def butterfly_all(grads, seed, byz_mask, weights, key, *rest):
         leaves = jax.tree.leaves(grads)
         # beyond-paper: gradients can travel the butterfly in bf16 — halves
         # the all_to_all + all_gather volume; CenteredClip still iterates in
         # f32 (EXPERIMENTS.md §Perf H3)
         vec = _flatten_local([l[0] for l in leaves], transport_dtype)
         vec = device_attack(vec, byz_mask, peer_axes, attack, key)
+        v0_full = None
+        if warm_start:
+            # previous aggregate, flattened in the SAME leaf order as vec
+            v0_full = _flatten_local(jax.tree.leaves(rest[0]), jnp.float32)
         agg_vec, verif = butterfly_stage(
             vec, peer_axes, n_peers, tau, clip_iters, weights, seed,
-            use_pallas=use_pallas, delta_max=delta_max,
+            use_pallas=use_pallas, delta_max=delta_max, v0_full=v0_full,
         )
         agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
         agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
@@ -304,12 +343,14 @@ def make_btard_train_step(
     manual_pspecs = jax.tree.map(
         lambda s: P(peer_axes, *s), pspecs, is_leaf=_is_p
     )
+    agg_specs = pspecs  # the aggregate tree shards exactly like the params
     stage2 = _shard_map(
         butterfly_all,
         mesh=mesh,
-        in_specs=(manual_pspecs, P(), P(), P(), P()),
+        in_specs=(manual_pspecs, P(), P(), P(), P())
+        + ((agg_specs,) if warm_start else ()),
         out_specs=(
-            jax.tree.map(lambda s: s, pspecs, is_leaf=_is_p),
+            agg_specs,
             {
                 "checksum": P(peer_axes),
                 "votes": P(peer_axes),
@@ -321,10 +362,12 @@ def make_btard_train_step(
         check_vma=False,
     )
 
-    def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
+    def step_core(params, opt_state, batch, step, seed, byz_mask, weights,
+                  v_prev=None):
         loss, grads = stage1(params, batch)
         key = jax.random.fold_in(jax.random.key(0), step)
-        agg, verif = stage2(grads, seed, byz_mask, weights, key)
+        rest = (v_prev,) if warm_start else ()
+        agg, verif = stage2(grads, seed, byz_mask, weights, key, *rest)
         updates, opt_state = optimizer.update(agg, opt_state, params, step)
         params = apply_updates(params, updates)
         metrics = {
@@ -332,13 +375,14 @@ def make_btard_train_step(
             "checksum_max": verif["checksum"].max(),
             "votes_max": verif["votes"].max(),
         }
-        return params, opt_state, metrics, verif
+        return params, opt_state, metrics, verif, agg
 
     if zero1:
-        n_data = mesh.shape.get("data", 1)
+        zaxis = peer_axes[0] if len(peer_axes) == 1 else "data"
+        n_zshards = mesh.shape.get(zaxis, 1)
         ospecs = {
             k: jax.tree.map(
-                lambda s, l: _with_data(s, l.shape, n_data),
+                lambda s, l: _with_data(s, l.shape, n_zshards, zaxis),
                 pspecs,
                 opt_abs[k],
                 is_leaf=_is_p,
@@ -346,19 +390,12 @@ def make_btard_train_step(
             for k in opt_abs
         }
 
-    jitted = jax.jit(
-        train_step,
-        in_shardings=(
-            _named(mesh, pspecs),
-            _named(mesh, ospecs),
-            _named(mesh, bspecs),
-            None,
-            None,
-            None,
-            None,
-        ),
-        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None, None),
-    )
+    specs = {
+        "params": pspecs,
+        "opt": ospecs,
+        "batch": bspecs,
+        "agg": agg_specs,
+    }
     abstract_args = (
         params_abs,
         opt_abs,
@@ -368,7 +405,152 @@ def make_btard_train_step(
         jax.ShapeDtypeStruct((n_peers,), jnp.float32),
         jax.ShapeDtypeStruct((n_peers,), jnp.float32),
     )
+    return step_core, mesh, specs, abstract_args
+
+
+def make_btard_train_step(
+    model: Model,
+    optimizer,
+    mesh,
+    shape,
+    tau: float = 1.0,
+    clip_iters: int = 20,
+    attack: str = "none",
+    use_pallas: bool = False,
+    delta_max: float | None = 1e9,
+    zero1: bool = True,
+    transport_dtype=jnp.float32,
+):
+    """Returns (jitted step, abstract args).
+
+    step(params, opt_state, batch, step_idx, seed, byz_mask, weights)
+      -> (params, opt_state, metrics, verif)
+    Params are replicated over the peer axes (each peer = full replica,
+    model-sharded over 'model'); optimizer state is ZeRO-1-sharded over the
+    peer axis when zero1 (the butterfly partition owner updates its shard —
+    exactly Alg. 7's per-partition ownership).
+    """
+    step_core, mesh, specs, abstract_args = _build_btard_step(
+        model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
+        attack=attack, use_pallas=use_pallas, delta_max=delta_max,
+        zero1=zero1, transport_dtype=transport_dtype, warm_start=False,
+    )
+
+    def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
+        params, opt_state, metrics, verif, _ = step_core(
+            params, opt_state, batch, step, seed, byz_mask, weights
+        )
+        return params, opt_state, metrics, verif
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(
+            _named(mesh, specs["params"]),
+            _named(mesh, specs["opt"]),
+            _named(mesh, specs["batch"]),
+            None,
+            None,
+            None,
+            None,
+        ),
+        out_shardings=(
+            _named(mesh, specs["params"]), _named(mesh, specs["opt"]),
+            None, None,
+        ),
+    )
     return jitted, abstract_args
+
+
+def make_btard_scan_train_step(
+    model: Model,
+    optimizer,
+    mesh,
+    shape,
+    n_scan_steps: int,
+    tau: float = 1.0,
+    clip_iters: int = 20,
+    attack: str = "none",
+    use_pallas: bool = False,
+    delta_max: float | None = 1e9,
+    zero1: bool = True,
+    transport_dtype=jnp.float32,
+    warm_start: bool = False,
+):
+    """The BTARD train step under ``lax.scan``: ``n_scan_steps`` full rounds
+    per dispatch, one compiled program, zero host sync between rounds.
+
+    step(params, opt_state, batches, steps, seeds, byz_mask, weights, v_prev)
+      -> (params, opt_state, metrics, verif, v_last)
+
+    batches: the single-step batch tree with a leading (n_scan_steps,) dim;
+    steps / seeds: (n_scan_steps,) i32. v_prev / v_last: the aggregate tree
+    (zeros_like(params) to start) — with ``warm_start`` each round's
+    CenteredClip starts from the previous round's aggregate, which cuts the
+    iteration budget (see kernels/DESIGN.md); without it the carry is
+    threaded but unused. metrics / verif gain a leading scan dim.
+    Returns (jitted step, abstract args).
+    """
+    step_core, mesh, specs, abstract_args = _build_btard_step(
+        model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
+        attack=attack, use_pallas=use_pallas, delta_max=delta_max,
+        zero1=zero1, transport_dtype=transport_dtype, warm_start=warm_start,
+    )
+
+    def scan_step(params, opt_state, batches, steps, seeds, byz_mask,
+                  weights, v_prev):
+        def body(carry, xs):
+            params, opt_state, v_prev = carry
+            batch, step, seed = xs
+            params, opt_state, metrics, verif, agg = step_core(
+                params, opt_state, batch, step, seed, byz_mask, weights,
+                v_prev=v_prev,
+            )
+            return (params, opt_state, agg), (metrics, verif)
+
+        (params, opt_state, v_last), (metrics, verif) = jax.lax.scan(
+            body, (params, opt_state, v_prev), (batches, steps, seeds)
+        )
+        return params, opt_state, metrics, verif, v_last
+
+    agg_shardings = _named(mesh, specs["agg"])
+    # stacked batches: leading scan dim replicated, per-step dims as before
+    scan_bspecs = jax.tree.map(
+        lambda s: P(None, *s), specs["batch"], is_leaf=_is_p
+    )
+    jitted = jax.jit(
+        scan_step,
+        in_shardings=(
+            _named(mesh, specs["params"]),
+            _named(mesh, specs["opt"]),
+            _named(mesh, scan_bspecs),
+            None,
+            None,
+            None,
+            None,
+            agg_shardings,
+        ),
+        out_shardings=(
+            _named(mesh, specs["params"]), _named(mesh, specs["opt"]),
+            None, None, agg_shardings,
+        ),
+    )
+    p_abs, o_abs, b_abs, step_abs, seed_abs, byz_abs, w_abs = abstract_args
+    stack = lambda tree: jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_scan_steps,) + l.shape, l.dtype), tree
+    )
+    scan_abstract = (
+        p_abs,
+        o_abs,
+        stack(b_abs),
+        jax.ShapeDtypeStruct((n_scan_steps,), jnp.int32),
+        jax.ShapeDtypeStruct((n_scan_steps,), jnp.int32),
+        byz_abs,
+        w_abs,
+        jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), p_abs
+        ),
+    )
+    return jitted, scan_abstract
 
 
 def _is_p(x):
@@ -376,21 +558,22 @@ def _is_p(x):
 
 
 def _drop_data(entry):
-    if entry == "data" or entry == "pod":
+    if entry in ("data", "pod", "peers"):
         return None
     if isinstance(entry, (tuple, list)):
-        kept = tuple(a for a in entry if a not in ("data", "pod"))
+        kept = tuple(a for a in entry if a not in ("data", "pod", "peers"))
         return kept or None
     return entry
 
 
-def _with_data(spec, shape, n_data):
+def _with_data(spec, shape, n_shards, axis="data"):
     """ZeRO-1: shard the first shardable (unsharded & divisible) dim of the
-    moment buffers on 'data' — the butterfly partition owner updates it."""
+    moment buffers on the peer axis — the butterfly partition owner updates
+    its shard."""
     entries = list(spec) + [None] * (len(shape) - len(spec))
     for i, (e, dim) in enumerate(zip(entries, shape)):
-        if e is None and dim % n_data == 0:
-            entries[i] = "data"
+        if e is None and dim % n_shards == 0:
+            entries[i] = axis
             return P(*entries)
     return P(*entries)
 

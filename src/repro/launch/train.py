@@ -10,6 +10,9 @@ Examples (CPU bring-up, 8 fake devices):
       --host-devices 8 --mesh 4x2 --steps 20 --defense btard
   python -m repro.launch.train --arch mamba2-2.7b --reduced --host-devices 8 \\
       --mesh 4x2 --steps 10 --attack sign_flip --byzantine 1,3
+  # scan engine: 5 rounds per compiled dispatch, warm-started CenteredClip
+  python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 8 \\
+      --mesh 4x2 --steps 20 --scan-steps 5 --warm-start-clip
 """
 import argparse
 import os
@@ -35,6 +38,12 @@ def main():
     ap.add_argument("--byzantine", default="", help="comma-separated peer idxs")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--scan-steps", type=int, default=0,
+                    help="BTARD rounds per jitted lax.scan dispatch "
+                         "(0 = one dispatch per round)")
+    ap.add_argument("--warm-start-clip", action="store_true",
+                    help="CenteredClip v0 = previous aggregate "
+                         "(implies the scan step; see kernels/DESIGN.md)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
@@ -52,7 +61,11 @@ def main():
     from repro.configs.base import InputShape
     from repro.core import butterfly as bf
     from repro.data import TokenPipeline
-    from repro.launch.steps import make_baseline_train_step, make_btard_train_step
+    from repro.launch.steps import (
+        make_baseline_train_step,
+        make_btard_scan_train_step,
+        make_btard_train_step,
+    )
     from repro.models import get_model
     from repro.optim import sgd
     from repro.sharding import set_mesh
@@ -69,7 +82,14 @@ def main():
     opt = sgd(args.lr, momentum=0.9, nesterov=True)
     n_peers = int(np.prod([mesh.shape[a] for a in names if a != "model"]))
 
-    if args.defense == "btard":
+    n_scan = max(args.scan_steps, 1 if args.warm_start_clip else 0)
+    if args.defense == "btard" and n_scan:
+        step_fn, _ = make_btard_scan_train_step(
+            model, opt, mesh, shape, n_scan_steps=n_scan, tau=args.tau,
+            clip_iters=args.clip_iters, attack=args.attack,
+            use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
+        )
+    elif args.defense == "btard":
         step_fn, _ = make_btard_train_step(
             model, opt, mesh, shape, tau=args.tau, clip_iters=args.clip_iters,
             attack=args.attack, use_pallas=args.use_pallas,
@@ -95,31 +115,68 @@ def main():
     weights = jnp.ones((n_peers,), jnp.float32)
 
     print(f"arch={model.cfg.name} params={model.param_count():,} "
-          f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)}")
+          f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)} "
+          f"scan={n_scan or '-'} warm={args.warm_start_clip}")
     t0 = time.time()
-    for step in range(args.steps):
-        batch = pipe.batch(step, extras=extras)
-        if args.defense == "btard":
-            params, opt_state, metrics, verif = step_fn(
-                params, opt_state, batch, jnp.int32(step),
-                jnp.int32(step * 7919 + 13), byz_mask, weights,
+    if args.defense == "btard" and n_scan:
+        v_prev = jax.tree.map(jnp.zeros_like, params)
+        rem = args.steps % n_scan
+        rem_fn = None
+        if rem:
+            # a shorter trailing chunk needs its own fixed-length program
+            rem_fn, _ = make_btard_scan_train_step(
+                model, opt, mesh, shape, n_scan_steps=rem, tau=args.tau,
+                clip_iters=args.clip_iters, attack=args.attack,
+                use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
             )
-            extra = (f" checksum={float(metrics['checksum_max']):.2e}"
-                     f" votes={float(metrics['votes_max']):.0f}")
-            # host-side ban policy: a violated partition checksum implicates
-            # its aggregating peer (partition j <-> peer j in the butterfly)
-            bad = bf.checksum_offender_peers(verif["checksum"])
+        for chunk in range(0, args.steps, n_scan):
+            idxs = list(range(chunk, min(chunk + n_scan, args.steps)))
+            if len(idxs) < n_scan:
+                step_fn = rem_fn
+            batches = jax.tree.map(
+                lambda *ls: jnp.stack(ls),
+                *[pipe.batch(s, extras=extras) for s in idxs],
+            )
+            steps_arr = jnp.asarray(idxs, jnp.int32)
+            seeds = jnp.asarray([s * 7919 + 13 for s in idxs], jnp.int32)
+            params, opt_state, metrics, verif, v_prev = step_fn(
+                params, opt_state, batches, steps_arr, seeds, byz_mask, weights
+            , v_prev)
+            # ban policy applied between dispatches from the LAST round's
+            # checksums (mid-chunk rounds share the chunk's weights)
+            bad = bf.checksum_offender_peers(verif["checksum"][-1])
             if len(bad) and args.attack != "none":
                 for b in bad:
                     weights = weights.at[int(b)].set(0.0)
-        else:
-            params, opt_state, metrics = step_fn(
-                params, opt_state, batch, jnp.int32(step)
-            )
-            extra = ""
-        if step % args.log_every == 0:
-            print(f"step {step:4d} loss={float(metrics['loss']):.4f}{extra}",
-                  flush=True)
+            if chunk % max(args.log_every, 1) == 0:
+                loss_last = float(metrics["loss"][-1])
+                print(f"step {idxs[-1]:4d} loss={loss_last:.4f}"
+                      f" checksum={float(metrics['checksum_max'][-1]):.2e}",
+                      flush=True)
+    else:
+        for step in range(args.steps):
+            batch = pipe.batch(step, extras=extras)
+            if args.defense == "btard":
+                params, opt_state, metrics, verif = step_fn(
+                    params, opt_state, batch, jnp.int32(step),
+                    jnp.int32(step * 7919 + 13), byz_mask, weights,
+                )
+                extra = (f" checksum={float(metrics['checksum_max']):.2e}"
+                         f" votes={float(metrics['votes_max']):.0f}")
+                # host-side ban policy: a violated partition checksum
+                # implicates its aggregating peer (partition j <-> peer j)
+                bad = bf.checksum_offender_peers(verif["checksum"])
+                if len(bad) and args.attack != "none":
+                    for b in bad:
+                        weights = weights.at[int(b)].set(0.0)
+            else:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch, jnp.int32(step)
+                )
+                extra = ""
+            if step % args.log_every == 0:
+                print(f"step {step:4d} loss={float(metrics['loss']):.4f}{extra}",
+                      flush=True)
     dt = time.time() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s ({dt/args.steps:.2f}s/step)")
     if args.checkpoint:

@@ -57,8 +57,13 @@ def _mesh_axes():
 
 
 def batch_axes():
-    """Mesh axes over which the global batch is sharded."""
-    return tuple(a for a in ("pod", "data") if a in _mesh_axes())
+    """Mesh axes over which the global batch is sharded. 'peers' is the
+    collapsed pod x data axis the BTARD step builds for its manual regions
+    (launch/steps._collapse_peer_mesh)."""
+    axes = _mesh_axes()
+    if "peers" in axes:
+        return ("peers",)
+    return tuple(a for a in ("pod", "data") if a in axes)
 
 
 def peer_axes():
@@ -73,7 +78,12 @@ def _resolve(logical):
         return None
     if logical == "batch":
         got = tuple(a for a in batch_axes() if a not in manual)
-        return got if got else None
+        if not got:
+            return None
+        # single axis as a scalar name, not a 1-tuple: P('data') and
+        # P(('data',)) partition identically, but spec CONSUMERS (cache
+        # sharding checks, ZeRO-1 insertion) match on the scalar form
+        return got[0] if len(got) == 1 else got
     if logical == "fsdp" or logical == "seq":
         return "data" if "data" in axes and "data" not in manual else None
     if logical == "seqp":  # sequence-parallel residual stream (opt-in)

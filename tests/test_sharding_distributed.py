@@ -115,6 +115,55 @@ def test_multi_pod_mesh_axes():
     assert "MULTIPOD OK" in out
 
 
+def test_scan_step_equals_stepwise_and_warm_start_runs():
+    out = _run(
+        """
+        import jax, jax.numpy as jnp
+        from repro.launch.steps import make_btard_scan_train_step, make_btard_train_step
+        from repro.models import get_model
+        from repro.optim import sgd
+        from repro.configs.base import InputShape
+
+        mesh = jax.make_mesh((4, 2), ('data', 'model'))
+        m = get_model('qwen3-1.7b', reduced=True)
+        shape = InputShape('t', 64, 8, 'train')
+        opt = sgd(0.05)
+        params = m.init_params(jax.random.key(0)); st = opt.init(params)
+        N = 3
+        toks = [jax.random.randint(jax.random.key(i), (8, 65), 0, m.cfg.vocab_size)
+                for i in range(N)]
+        byz = jnp.zeros((4,), jnp.float32); w = jnp.ones((4,), jnp.float32)
+
+        one, _ = make_btard_train_step(m, opt, mesh, shape, tau=2.0, clip_iters=5)
+        p1, s1 = params, st
+        for i in range(N):
+            p1, s1, met, _ = one(p1, s1, {'tokens': toks[i]}, jnp.int32(i),
+                                 jnp.int32(i * 7919 + 13), byz, w)
+
+        scan, _ = make_btard_scan_train_step(m, opt, mesh, shape, n_scan_steps=N,
+                                             tau=2.0, clip_iters=5)
+        batches = {'tokens': jnp.stack(toks)}
+        steps = jnp.arange(N, dtype=jnp.int32)
+        seeds = steps * 7919 + 13
+        v0 = jax.tree.map(jnp.zeros_like, params)
+        p2, s2, mets, verifs, v_last = scan(params, st, batches, steps, seeds, byz, w, v0)
+        diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+        mx = max(jax.tree.leaves(diffs))
+        assert mx < 5e-3, mx
+        assert mets['loss'].shape == (N,)
+
+        # warm start: runs end-to-end and stays checksum-clean when honest
+        warm, _ = make_btard_scan_train_step(m, opt, mesh, shape, n_scan_steps=N,
+                                             tau=2.0, clip_iters=5, warm_start=True)
+        p3, s3, mets3, _, _ = warm(params, st, batches, steps, seeds, byz, w, v0)
+        assert float(mets3['checksum_max'].max()) < 1e-3
+        print('SCAN EQUIV OK', mx)
+        """
+    )
+    assert "SCAN EQUIV OK" in out
+
+
 def test_pallas_kernel_inside_distributed_step():
     out = _run(
         """
