@@ -18,9 +18,11 @@ Four views:
     jitted lax.scan ProtocolState engine (core.engine), at the default
     clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json.
 
-Emits BENCH_overhead.json + BENCH_scan.json next to this file so the perf
-trajectory is machine-trackable across PRs.
+Emits BENCH_overhead.json + BENCH_scan.json next to this file (or --out-dir)
+so the perf trajectory is machine-trackable across PRs; CI regenerates both
+with --quick and gates merges on benchmarks/check_regression.py.
 """
+import argparse
 import json
 import os
 import time
@@ -48,38 +50,56 @@ def comm_model(n, d, bytes_per=4):
     return ar, btard_extra
 
 
-def hbm_pass_model(n_iters, n, d, bytes_per=4):
+def hbm_pass_model(n_iters, n, d, bytes_per=4, adaptive_iters=2):
     """HBM traffic of the full aggregation workload per robust all-reduce:
     across all n partitions the streamed stack totals n * d values (each
     partition is an (n, d/n) peer stack).
 
     seed two-phase kernel + standalone table kernel: 2*n_iters + 1 passes;
-    fused incremental-norm kernel with verification epilogue: n_iters + 2.
+    fused incremental-norm kernel with verification epilogue: n_iters + 2;
+    adaptive early-exit driver: iters_run + 2 (jnp prologue + one pass per
+    iteration actually run + the single verification epilogue) —
+    ``adaptive_iters`` is the warm-start steady-state iteration count
+    (measured 1-2 on the convergence workloads, vs the fixed 60 budget).
     """
     stack = n * d * bytes_per
     return {
         "seed_passes": 2 * n_iters + 1,
         "fused_passes": n_iters + 2,
+        "adaptive_passes": adaptive_iters + 2,
         "seed_bytes": (2 * n_iters + 1) * stack,
         "fused_bytes": (n_iters + 2) * stack,
+        "adaptive_bytes": (adaptive_iters + 2) * stack,
         "pass_speedup": (2 * n_iters + 1) / (n_iters + 2),
+        "adaptive_pass_speedup": (n_iters + 2) / (adaptive_iters + 2),
     }
 
 
-def scan_engine_bench(steps=None, fast=True):
+def scan_engine_bench(steps=None, fast=True, out_dir=None):
     """Legacy host loop vs jitted lax.scan ProtocolState engine: steps/s on
     the controlled classification workload (16 peers, 7 Byzantine,
-    sign-flip), at clip_iters=60 (the protocol default) and at the
-    warm-start budget clip_iters=15. Writes BENCH_scan.json."""
+    sign-flip), at clip_iters=60 (the protocol default), at the warm-start
+    budget clip_iters=15, and with the adaptive early-exit budget
+    (``adaptive_tol``, cap 60) — plus adaptive-vs-fixed CURVES so the
+    budget/steps-per-second trade-off is machine-trackable. Writes
+    BENCH_scan.json."""
     from benchmarks.common import classification_setup
     from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
     from repro.optim import sgd
 
     if steps is None:
-        steps = 30 if fast else 100
-    loss_fn, params0, batch_fn, accuracy = classification_setup()
+        # 30-step sections put the jit-dispatch overhead at ~30% of the
+        # measurement and compress the adaptive-vs-fixed ratio; 60 keeps
+        # quick mode quick while the ratio tracks the full-mode value
+        steps = 60 if fast else 100
+    scan_json = os.path.join(out_dir or _DIR, "BENCH_scan.json")
+    # dim=512 -> d ≈ 2k: CenteredClip is a real fraction of the step, so
+    # the adaptive-vs-fixed ratio measures the clip budget rather than
+    # per-step dispatch jitter (at the tests' dim=16 the clip is ~nothing
+    # and the ratio is noise-bound)
+    loss_fn, params0, batch_fn, accuracy = classification_setup(dim=512)
 
-    def make(clip_iters, warm_start=False):
+    def make(clip_iters, warm_start=False, adaptive_tol=None):
         cfg = TrainerConfig(
             n_peers=16,
             byzantine=tuple(range(9, 16)),
@@ -90,57 +110,123 @@ def scan_engine_bench(steps=None, fast=True):
             m_validators=2,
             seed=0,
             warm_start=warm_start,
+            adaptive_tol=adaptive_tol,
         )
         return BTARDTrainer(
             loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9)
         )
 
-    def time_run(method, clip_iters, warm_start=False):
-        tr = make(clip_iters, warm_start)
-        getattr(tr, method)(steps)  # warmup: traces + compiles everything
-        t0 = time.perf_counter()
-        getattr(tr, method)(steps)  # steady state (bans settled — the
-        dt = time.perf_counter() - t0  # regime a long run lives in)
-        return steps / dt, accuracy(tr.unraveled_params()), len(tr.banned)
+    def time_run(method, clip_iters, warm_start=False, adaptive_tol=None,
+                 reps=None):
+        tr = make(clip_iters, warm_start, adaptive_tol)
+        fn = getattr(tr, method)
+        fn(steps)  # warmup: traces + compiles everything
+        if reps is None:
+            # a 30-step scan section is ~10 ms — single-shot timing is
+            # dispatch-jitter noise, so take best-of-many for the fast
+            # methods (the legacy host loop is 50x slower; 2 reps suffice)
+            reps = 2 if method == "run" else 8
+        best = float("inf")
+        for _ in range(reps):  # best-of-reps: steady state (bans settled —
+            t0 = time.perf_counter()  # the regime a long run lives in)
+            fn(steps)
+            best = min(best, time.perf_counter() - t0)
+        iters = [
+            h["clip_iters_used"]
+            for h in tr.history[steps:]
+            if "clip_iters_used" in h
+        ]
+        cell = {
+            "steps_per_s": steps / best,
+            "clip_iters": clip_iters,
+            "acc": accuracy(tr.unraveled_params()),
+            "banned": len(tr.banned),
+        }
+        if warm_start:
+            cell["warm_start"] = True
+        if adaptive_tol is not None:
+            cell["adaptive_tol"] = adaptive_tol
+            cell["clip_iters_used_mean"] = float(np.mean(iters)) if iters else None
+        return cell
 
-    loop_sps, loop_acc, loop_ban = time_run("run", 60)
-    scan_sps, scan_acc, scan_ban = time_run("run_scan", 60)
-    warm_sps, warm_acc, warm_ban = time_run("run_scan", 15, warm_start=True)
+    loop = time_run("run", 60, reps=1)
+    scan = time_run("run_scan", 60)
+    warm = time_run("run_scan", 15, warm_start=True)
+    # the device-resident default: adaptive early exit at the protocol-default
+    # cap (60) with warm start — the acceptance headline vs the fixed scan
+    adaptive = time_run("run_scan", 60, warm_start=True, adaptive_tol=1e-4)
+
+    # headline ratio from INTERLEAVED paired timing: the two cells alternate
+    # within one loop, so a machine-wide slowdown (CI runners!) hits both
+    # symmetrically and best-of picks each cell's cleanest samples — the
+    # independently-timed cells above keep the absolute steps/s numbers
+    tr_fixed = make(60)
+    tr_adapt = make(60, warm_start=True, adaptive_tol=1e-4)
+    tr_fixed.run_scan(steps)
+    tr_adapt.run_scan(steps)
+    best_fixed = best_adapt = float("inf")
+    for _ in range(8):
+        t0 = time.perf_counter()
+        tr_fixed.run_scan(steps)
+        best_fixed = min(best_fixed, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        tr_adapt.run_scan(steps)
+        best_adapt = min(best_adapt, time.perf_counter() - t0)
+    adaptive_vs_scan = best_fixed / max(best_adapt, 1e-9)
+    fixed_curve = [scan, warm] + [time_run("run_scan", 30)]
+    adaptive_curve = [
+        time_run("run_scan", 60, warm_start=True, adaptive_tol=tol)
+        for tol in (1e-2, 1e-6)
+    ] + [adaptive]
     payload = {
         "bench": "scan_engine",
         "backend": jax.default_backend(),
         "steps": steps,
         "n_peers": 16,
-        "legacy_loop": {
-            "steps_per_s": loop_sps, "clip_iters": 60,
-            "acc": loop_acc, "banned": loop_ban,
-        },
-        "scan_engine": {
-            "steps_per_s": scan_sps, "clip_iters": 60,
-            "acc": scan_acc, "banned": scan_ban,
-        },
-        "scan_engine_warm15": {
-            "steps_per_s": warm_sps, "clip_iters": 15, "warm_start": True,
-            "acc": warm_acc, "banned": warm_ban,
-        },
-        "scan_speedup_x": scan_sps / max(loop_sps, 1e-9),
-        "warm_speedup_x": warm_sps / max(loop_sps, 1e-9),
+        "legacy_loop": loop,
+        "scan_engine": scan,
+        "scan_engine_warm15": warm,
+        "scan_engine_adaptive": adaptive,
+        "fixed_curve": fixed_curve,
+        "adaptive_curve": adaptive_curve,
+        "scan_speedup_x": scan["steps_per_s"] / max(loop["steps_per_s"], 1e-9),
+        "warm_speedup_x": warm["steps_per_s"] / max(loop["steps_per_s"], 1e-9),
+        "adaptive_speedup_x": adaptive["steps_per_s"]
+        / max(loop["steps_per_s"], 1e-9),
+        # the acceptance ratio: adaptive early exit vs the PR 2 fixed-budget
+        # scan path, both at protocol-default settings (cap/budget 60),
+        # measured pairwise-interleaved (above)
+        "adaptive_speedup_vs_scan_x": adaptive_vs_scan,
     }
-    with open(SCAN_JSON_PATH, "w") as f:
+    with open(scan_json, "w") as f:
         json.dump(payload, f, indent=2)
     emit(
         "overhead/scan_engine",
-        1e6 / max(scan_sps, 1e-9),
-        f"loop_sps={loop_sps:.1f};scan_sps={scan_sps:.1f};"
-        f"warm15_sps={warm_sps:.1f};speedup={payload['scan_speedup_x']:.1f}x;"
-        f"acc_loop={loop_acc:.3f};acc_scan={scan_acc:.3f};"
-        f"acc_warm={warm_acc:.3f}",
+        1e6 / max(scan["steps_per_s"], 1e-9),
+        f"loop_sps={loop['steps_per_s']:.1f};scan_sps={scan['steps_per_s']:.1f};"
+        f"warm15_sps={warm['steps_per_s']:.1f};"
+        f"adaptive_sps={adaptive['steps_per_s']:.1f};"
+        f"speedup={payload['scan_speedup_x']:.1f}x;"
+        f"adaptive_vs_scan={payload['adaptive_speedup_vs_scan_x']:.2f}x;"
+        f"acc_loop={loop['acc']:.3f};acc_scan={scan['acc']:.3f};"
+        f"acc_adaptive={adaptive['acc']:.3f};"
+        f"iters_used={adaptive['clip_iters_used_mean']}",
     )
-    print(f"wrote {SCAN_JSON_PATH}", flush=True)
+    print(f"wrote {scan_json}", flush=True)
     return payload
 
 
-def main(fast=True):
+def main(fast=True, out_dir=None):
+    if fast and out_dir is None:
+        # quick mode must never clobber the committed (CI-gated, full-mode)
+        # baselines: park its JSON in a scratch subdir unless the caller
+        # explicitly chose a destination
+        out_dir = os.path.join(_DIR, "quick")
+        os.makedirs(out_dir, exist_ok=True)
+        print(f"quick mode: writing BENCH_*.json to {out_dir} "
+              "(committed baselines are full-mode; pass --out-dir to "
+              "override)", flush=True)
+    json_path = os.path.join(out_dir or _DIR, "BENCH_overhead.json")
     n, n_iters = 16, 20
     dims = [1 << 14, 1 << 17] if fast else [1 << 14, 1 << 17, 1 << 20, 1 << 23]
     # interpret-mode pallas is CPU-interpreter-bound; keep its sizes sane
@@ -204,11 +290,22 @@ def main(fast=True):
         else "compiled",
         "records": records,
     }
-    with open(JSON_PATH, "w") as f:
+    with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {JSON_PATH}", flush=True)
-    scan_engine_bench(fast=fast)
+    print(f"wrote {json_path}", flush=True)
+    scan_engine_bench(fast=fast, out_dir=out_dir)
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: small dims, 60-step scan cells, output "
+                         "parked in benchmarks/quick/ unless --out-dir")
+    ap.add_argument("--out-dir", default=None,
+                    help="write BENCH_*.json here instead of benchmarks/ "
+                         "(CI writes to a scratch dir and diffs against the "
+                         "committed baselines via check_regression.py)")
+    args = ap.parse_args()
+    if args.out_dir:
+        os.makedirs(args.out_dir, exist_ok=True)
+    main(fast=args.quick, out_dir=args.out_dir)

@@ -27,10 +27,20 @@ def emit(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def classification_setup():
+def classification_setup(dim=DIM, classes=CLASSES):
+    """Controlled §4.1 workload. ``dim`` scales the gradient dimension (the
+    scan bench uses a larger dim so CenteredClip is a real fraction of the
+    step and the adaptive-vs-fixed ratio measures the clip, not dispatch).
+    The class-mean margin shrinks with sqrt(dim) so difficulty stays
+    dim-invariant — otherwise high dims separate so fast the softmax
+    saturates to exact-zero gradients before the attack window opens and
+    sign-flip becomes an undetectable no-op (nothing to ban)."""
+    margin = 2.0 * (DIM / dim) ** 0.5
+
     def batch_fn(peer, step, flipped):
         return classification_batch(
-            peer_seed(0, step, peer), 16, DIM, CLASSES, flip_labels=flipped
+            peer_seed(0, step, peer), 16, dim, classes,
+            flip_labels=flipped, margin=margin,
         )
 
     def loss_fn(params, batch):
@@ -41,8 +51,8 @@ def classification_setup():
             )
         )
 
-    params0 = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
-    eval_batch = classification_batch(10**7, 1024, DIM, CLASSES)
+    params0 = {"w": jnp.zeros((dim, classes)), "b": jnp.zeros((classes,))}
+    eval_batch = classification_batch(10**7, 1024, dim, classes, margin=margin)
 
     def accuracy(params):
         logits = eval_batch["x"] @ params["w"] + params["b"]

@@ -37,6 +37,10 @@ class TrainerConfig:
     seed: int = 0
     use_pallas: bool = False  # fused aggregation+tables kernel (DESIGN.md)
     warm_start: bool = False  # CenteredClip v0 = last aggregate (DESIGN.md)
+    # stop CenteredClip at ||v_{l+1}-v_l|| <= adaptive_tol (clip_iters is
+    # then the static cap); None = fixed budget. Composes with warm_start —
+    # together they convert the ~2x iters-to-tol saving into wall clock.
+    adaptive_tol: float | None = None
 
 
 class BTARDTrainer:
@@ -70,6 +74,7 @@ class BTARDTrainer:
             seed=cfg.seed,
             use_pallas=cfg.use_pallas,
             warm_start=cfg.warm_start,
+            adaptive_tol=cfg.adaptive_tol,
         )
         self.history: list = []
         self._step = 0
@@ -157,32 +162,24 @@ class BTARDTrainer:
     # ONE jitted lax.scan over the ProtocolState pytree (core.engine)
     # ------------------------------------------------------------------
     def _pure_grads_fn(self):
-        """grads_fn(flat_params, t, flips) -> (G, honest_G) for the engine.
+        """grads_fn(flat_params, t, flips) -> (G, honest_G) for the engine —
+        the engine's device-resident data phase (eng.device_data_grads_fn):
+        per-peer public-seed batches are generated INSIDE the scanned step.
         Requires batch_fn to be jax-traceable in (peer, step) — true of the
         public-seed pipelines; arbitrary host batch_fns must use run()."""
-        label_flip = self.cfg.attack.kind == "label_flip"
         unravel, loss_fn, batch_fn = self._unravel, self._loss, self.batch_fn
-        n = self.cfg.n_peers
 
-        def per_peer(flat, i, t, flip):
-            def g_of(flipped):
-                batch = batch_fn(i, t, flipped)
-                return ravel_pytree(
-                    jax.grad(lambda p: loss_fn(p, batch))(unravel(flat))
-                )[0]
+        def grad_fn(flat, batch):
+            return ravel_pytree(
+                jax.grad(lambda p: loss_fn(p, batch))(unravel(flat))
+            )[0]
 
-            g_honest = g_of(False)
-            g = (
-                jnp.where(flip, g_of(True), g_honest) if label_flip else g_honest
-            )
-            return g, g_honest
-
-        def grads_fn(flat, t, flips):
-            return jax.vmap(lambda i, f: per_peer(flat, i, t, f))(
-                jnp.arange(n), flips
-            )
-
-        return grads_fn
+        return eng.device_data_grads_fn(
+            self.cfg.n_peers,
+            lambda i, t, flipped: batch_fn(i, t, flipped),
+            grad_fn,
+            label_flip=self.cfg.attack.kind == "label_flip",
+        )
 
     def _get_scan_runner(self, n_steps):
         """Jitted (state, flat_params, opt_state) -> scanned n_steps rounds;
@@ -232,6 +229,7 @@ class BTARDTrainer:
         banned_now = np.asarray(outs.banned_now)
         reasons = np.asarray(outs.ban_reason_now)
         g_norms = np.linalg.norm(np.asarray(outs.g_hat), axis=1)
+        iters_used = np.asarray(outs.clip_iters_used)
         for k in range(n_steps):
             new = [
                 (int(i), eng.BAN_REASON_NAMES[int(reasons[k, i])])
@@ -243,6 +241,7 @@ class BTARDTrainer:
                 "grad_norm": float(g_norms[k]),
                 "n_banned": len(proto.banned),
                 "banned_now": new,
+                "clip_iters_used": int(iters_used[k]),
             }
             self.history.append(rec)
             if log:

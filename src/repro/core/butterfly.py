@@ -12,13 +12,15 @@ shapes static — recorded in DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.centered_clip import centered_clip, clip_residuals
+from repro.core.centered_clip import (
+    centered_clip_adaptive_stacked,
+    centered_clip_stacked,
+    clip_residuals,
+)
 
 
 def pad_to_parts(d: int, n: int) -> int:
@@ -62,13 +64,73 @@ def butterfly_clip(
         )
         return agg, parts
 
-    clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
     stacked = jnp.swapaxes(parts, 0, 1)  # (n_parts, n, part)
-    if v0 is None:
-        agg = jax.vmap(lambda xs: clip(xs))(stacked)  # (n_parts, part)
-    else:
-        agg = jax.vmap(lambda xs, v: clip(xs, v0=v))(stacked, v0)
+    agg = centered_clip_stacked(
+        stacked, tau, n_iters=n_iters, weights=weights, v0=v0
+    )
     return agg, parts
+
+
+def butterfly_clip_adaptive(
+    grads, tau, tol, max_iters: int, weights=None, use_pallas=False, v0=None
+):
+    """Adaptive-budget ButterflyClip aggregation: each partition's
+    CenteredClip runs until ``||v_{l+1}-v_l|| <= tol`` (static ``max_iters``
+    cap) under a ``lax.while_loop`` — the fixed point is unchanged, only the
+    iteration budget adapts (warm starts via ``v0`` compound the saving).
+
+    Returns (agg_parts (n_parts, part), parts (n, n_parts, part),
+    iters (n_parts,) i32). use_pallas routes through the early-exit
+    one-pass-per-iteration kernel driver (kernels/ops).
+    """
+    n = grads.shape[0]
+    parts = split_parts(grads, n)
+    stacked = jnp.swapaxes(parts, 0, 1)
+
+    if use_pallas:
+        from repro.kernels.ops import butterfly_clip_adaptive_op
+
+        agg, iters = butterfly_clip_adaptive_op(
+            stacked, tau, tol, weights, v0=v0, max_iters=max_iters
+        )
+        return agg, parts, iters
+
+    agg, iters = centered_clip_adaptive_stacked(
+        stacked, tau, tol, max_iters, weights=weights, v0=v0
+    )
+    return agg, parts, iters
+
+
+def butterfly_clip_verified_adaptive(
+    grads, tau, z, tol, max_iters: int, weights=None, use_pallas=False,
+    v0=None,
+):
+    """Adaptive aggregation PLUS the Alg. 6 broadcast tables.
+
+    The tables are a deterministic function of (parts, agg, z): however many
+    iterations the early exit took, the verification epilogue runs EXACTLY
+    once against the final iterate, so every peer recomputing the tables
+    from the broadcast aggregate gets identical values (the accusation
+    semantics never see the iteration count — kernels/DESIGN.md).
+
+    Returns (agg_parts, parts, s (n, n_parts), norms (n, n_parts),
+    iters (n_parts,) i32).
+    """
+    if use_pallas:
+        from repro.kernels.ops import butterfly_clip_fused_adaptive_op
+
+        n = grads.shape[0]
+        parts = split_parts(grads, n)
+        agg, s, norms, iters = butterfly_clip_fused_adaptive_op(
+            jnp.swapaxes(parts, 0, 1), tau, z, tol, weights, v0=v0,
+            max_iters=max_iters,
+        )
+        return agg, parts, s, norms, iters
+    agg, parts, iters = butterfly_clip_adaptive(
+        grads, tau, tol, max_iters, weights=weights, v0=v0
+    )
+    s, norms = verification_tables(parts, agg, z, tau)
+    return agg, parts, s, norms, iters
 
 
 def butterfly_clip_verified(
@@ -98,11 +160,9 @@ def butterfly_clip_verified(
         )
         return agg, parts, s, norms
 
-    clip = functools.partial(centered_clip, tau=tau, n_iters=n_iters, weights=weights)
-    if v0 is None:
-        agg = jax.vmap(lambda xs: clip(xs))(stacked)
-    else:
-        agg = jax.vmap(lambda xs, v: clip(xs, v0=v))(stacked, v0)
+    agg = centered_clip_stacked(
+        stacked, tau, n_iters=n_iters, weights=weights, v0=v0
+    )
     s, norms = verification_tables(parts, agg, z, tau)
     return agg, parts, s, norms
 

@@ -41,6 +41,110 @@ def _clip_weights(diff_norm, tau):
     return jnp.where(jnp.isinf(tau), 1.0, w)
 
 
+def _stacked_update(xs, v, tau, weights, wsum):
+    """One CenteredClip iteration over stacked partitions.
+
+    xs: (P, n, part) f32; v: (P, part) f32 -> the update (P, part) f32.
+    The SINGLE update rule shared by the fixed-budget (fori_loop) and
+    adaptive (while_loop) paths — sharing it is what makes ``adaptive with
+    tol=0`` reproduce the fixed-iteration aggregate bitwise (tested in
+    tests/test_centered_clip.py).
+    """
+    diff = xs - v[:, None, :]
+    norms = jnp.linalg.norm(diff, axis=2)  # (P, n)
+    cw = _clip_weights(norms, tau) * weights[None, :]
+    return (cw[..., None] * diff).sum(1) / wsum
+
+
+def _stacked_args(stacked, weights, v0):
+    P, n, part = stacked.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    weights = weights.astype(jnp.float32)
+    wsum = jnp.maximum(weights.sum(), 1e-30)
+    v = (
+        jnp.zeros((P, part), jnp.float32)
+        if v0 is None
+        else v0.astype(jnp.float32)
+    )
+    return stacked.astype(jnp.float32), weights, wsum, v
+
+
+def centered_clip_stacked(stacked, tau, n_iters: int = 20, weights=None,
+                          v0=None):
+    """Batched CenteredClip over stacked partitions: (P, n, part) -> (P, part).
+
+    The butterfly aggregation's inner loop — every partition advances one
+    iteration per pass (identical ops to ``vmap(centered_clip)``, shared
+    with the adaptive variant below). tau: scalar or (n_iters,) schedule.
+    """
+    xs_f, weights, wsum, v = _stacked_args(stacked, weights, v0)
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+
+    def body(l, v):
+        return v + _stacked_update(xs_f, v, taus[l], weights, wsum)
+
+    return jax.lax.fori_loop(0, n_iters, body, v)
+
+
+def centered_clip_adaptive_stacked(stacked, tau, tol, max_iters: int,
+                                   weights=None, v0=None):
+    """Adaptive-budget CenteredClip over stacked partitions: iterate until
+    ``||v_{l+1} - v_l|| <= tol`` PER PARTITION (with a static ``max_iters``
+    cap), under one ``lax.while_loop``.
+
+    A partition whose update dropped below tol is frozen (its carry no
+    longer changes) while the others keep iterating — exactly the batching
+    rule of ``vmap(while_loop)``, so per-partition results equal independent
+    adaptive loops. With ``tol=0`` every partition runs the full cap through
+    the SAME update rule as :func:`centered_clip_stacked`, reproducing the
+    fixed-budget aggregate bitwise. Warm starting (``v0`` = previous
+    aggregate) composes: it shortens the trajectory, never moves the fixed
+    point (unique for tau > 0).
+
+    Returns (v (P, part) f32, iters (P,) i32 — iterations each partition ran).
+    """
+    xs_f, weights, wsum, v = _stacked_args(stacked, weights, v0)
+    P = xs_f.shape[0]
+    tau_f = jnp.asarray(tau, jnp.float32)
+    tol2 = jnp.float32(tol) ** 2
+
+    def cond(carry):
+        _, d2, it, _ = carry
+        return jnp.logical_and((d2 > tol2).any(), it < max_iters)
+
+    def body(carry):
+        v, d2, it, iters = carry
+        upd = _stacked_update(xs_f, v, tau_f, weights, wsum)
+        active = d2 > tol2  # (P,) — converged partitions are frozen
+        v = jnp.where(active[:, None], v + upd, v)
+        d2 = jnp.where(active, (upd * upd).sum(-1), d2)
+        return v, d2, it + 1, iters + active.astype(jnp.int32)
+
+    v, _, _, iters = jax.lax.while_loop(
+        cond,
+        body,
+        (v, jnp.full((P,), jnp.inf, jnp.float32), jnp.int32(0),
+         jnp.zeros((P,), jnp.int32)),
+    )
+    return v, iters
+
+
+def centered_clip_adaptive(xs, tau, tol, max_iters: int, weights=None,
+                           v0=None):
+    """Single-partition adaptive CenteredClip: (n, d) -> ((d,) f32, () i32).
+
+    ``lax.while_loop`` with the shared update rule — stops at
+    ``||v_{l+1}-v_l|| <= tol`` or after ``max_iters``; see
+    :func:`centered_clip_adaptive_stacked`.
+    """
+    v, iters = centered_clip_adaptive_stacked(
+        jnp.asarray(xs)[None], tau, tol, max_iters, weights=weights,
+        v0=None if v0 is None else jnp.asarray(v0)[None],
+    )
+    return v[0], iters[0]
+
+
 def centered_clip(xs, tau, n_iters: int = 20, weights=None, v0=None):
     """Robust aggregate of ``xs``: (n, d) -> (d,).
 

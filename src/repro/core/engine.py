@@ -90,6 +90,9 @@ class StepOutputs(NamedTuple):
     check_averaging: jnp.ndarray  # () i32
     n_active: jnp.ndarray  # () i32 — active count at step start
     validators: jnp.ndarray  # (n,) f32 — this step's validator mask
+    clip_iters_used: jnp.ndarray  # () i32 — max CenteredClip iterations any
+    # partition ran (== cfg.clip_iters on the fixed path; the adaptive
+    # early-exit's actual budget otherwise)
 
 
 @dataclass(frozen=True)
@@ -118,6 +121,10 @@ class EngineConfig:
     # engine switches
     warm_start: bool = False  # v0 = previous aggregate (fewer clip iters)
     use_pallas: bool = False
+    # adaptive CenteredClip: stop when ||v_{l+1}-v_l|| <= adaptive_tol, with
+    # clip_iters as the static cap. None = fixed budget. tol=0.0 reproduces
+    # the fixed-budget aggregates bitwise (shared update rule).
+    adaptive_tol: float | None = None
 
     @property
     def n_parts(self) -> int:
@@ -277,24 +284,43 @@ def phase_mprng(cfg: EngineConfig, state: ProtocolState, byz):
 
 def phase_butterfly(cfg: EngineConfig, state: ProtocolState, G, weights, seed):
     """butterfly_clip: per-partition CenteredClip + the Alg. 6 broadcast
-    tables, optionally warm-started from the previous aggregate."""
+    tables, optionally warm-started from the previous aggregate and/or run
+    with the adaptive early-exit budget (``cfg.adaptive_tol``). Returns the
+    max iteration count any partition ran as the last element — the
+    verification tables are always computed exactly once against the final
+    iterate, so downstream accusation semantics never see the budget."""
     z = bf.get_random_directions(seed, cfg.n_parts, cfg.part)
     v0 = None
     if cfg.warm_start:
         v0 = jnp.where(state.step > 0, state.prev_agg, 0.0)
+    iters_used = jnp.asarray(cfg.clip_iters, jnp.int32)
     if cfg.aggregator_attack and cfg.aggregator_scale > 0:
         # tables must be computed against the (possibly corrupted) received
         # aggregate, so aggregation and tables split into two calls here
-        agg, parts = bf.butterfly_clip(
-            G, tau=cfg.tau, n_iters=cfg.clip_iters, weights=weights,
+        if cfg.adaptive_tol is not None:
+            agg, parts, iters = bf.butterfly_clip_adaptive(
+                G, cfg.tau, cfg.adaptive_tol, cfg.clip_iters, weights=weights,
+                use_pallas=cfg.use_pallas, v0=v0,
+            )
+            iters_used = iters.max()
+        else:
+            agg, parts = bf.butterfly_clip(
+                G, tau=cfg.tau, n_iters=cfg.clip_iters, weights=weights,
+                use_pallas=cfg.use_pallas, v0=v0,
+            )
+        return agg, parts, z, None, None, iters_used
+    if cfg.adaptive_tol is not None:
+        agg, parts, s_tbl, norm_tbl, iters = bf.butterfly_clip_verified_adaptive(
+            G, cfg.tau, z, cfg.adaptive_tol, cfg.clip_iters, weights=weights,
             use_pallas=cfg.use_pallas, v0=v0,
         )
-        return agg, parts, z, None, None
-    agg, parts, s_tbl, norm_tbl = bf.butterfly_clip_verified(
-        G, cfg.tau, z, n_iters=cfg.clip_iters, weights=weights,
-        use_pallas=cfg.use_pallas, v0=v0,
-    )
-    return agg, parts, z, s_tbl, norm_tbl
+        iters_used = iters.max()
+    else:
+        agg, parts, s_tbl, norm_tbl = bf.butterfly_clip_verified(
+            G, cfg.tau, z, n_iters=cfg.clip_iters, weights=weights,
+            use_pallas=cfg.use_pallas, v0=v0,
+        )
+    return agg, parts, z, s_tbl, norm_tbl, iters_used
 
 
 def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
@@ -480,7 +506,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
     seed, mprng_ban = phase_mprng(cfg, state, byz)
 
     # ---- butterfly_clip (+ tables) ---------------------------------------
-    agg, parts, z, s_tbl, norm_tbl = phase_butterfly(
+    agg, parts, z, s_tbl, norm_tbl, iters_used = phase_butterfly(
         cfg, state, G, weights, seed
     )
     agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
@@ -541,6 +567,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         check_averaging=chk_avg,
         n_active=active.sum().astype(jnp.int32),
         validators=validator,
+        clip_iters_used=iters_used,
     )
     return new_state, out
 
@@ -552,6 +579,45 @@ def jit_protocol_step(cfg: EngineConfig):
 
 
 # ---------------------------------------------------------------------------
+# Device-resident data phase
+# ---------------------------------------------------------------------------
+def device_data_grads_fn(n: int, batch_fn: Callable, grad_fn: Callable,
+                         label_flip: bool = False):
+    """Build a scan-compatible ``grads_fn`` whose DATA PHASE runs inside the
+    step function: per-peer public-seed batches are generated ON DEVICE
+    (vmapped over peers), so a scanned run moves zero batch bytes host->
+    device per step.
+
+    batch_fn(peer, step, flipped) -> batch pytree — pure and traceable in
+    (peer, step) (e.g. ``TokenPipeline.device_batch`` or
+    ``classification_batch`` over ``peer_key``); the public-seed property
+    means a validator recomputing peer i's batch gets the same bits on any
+    path. grad_fn(params, batch) -> (d,) flat gradient.
+
+    Returns grads_fn(params, t, flips) -> (G, honest_G), the signature
+    :func:`scan_protocol` consumes. When ``label_flip``, flipped rows carry
+    the flipped-label gradient in G while honest_G keeps the recompute
+    (exactly what a validator obtains from the public seed).
+    """
+
+    def per_peer(params, i, t, flip):
+        g_honest = grad_fn(params, batch_fn(i, t, False))
+        if label_flip:
+            g = jnp.where(flip, grad_fn(params, batch_fn(i, t, True)),
+                          g_honest)
+        else:
+            g = g_honest
+        return g, g_honest
+
+    def grads_fn(params, t, flips):
+        return jax.vmap(lambda i, f: per_peer(params, i, t, f))(
+            jnp.arange(n), flips
+        )
+
+    return grads_fn
+
+
+# ---------------------------------------------------------------------------
 # Scanned multi-step runner
 # ---------------------------------------------------------------------------
 def scan_protocol(cfg: EngineConfig, state: ProtocolState, byz_mask, params,
@@ -559,9 +625,12 @@ def scan_protocol(cfg: EngineConfig, state: ProtocolState, byz_mask, params,
     """Run ``n_steps`` protocol rounds under one ``lax.scan`` (no host sync).
 
     grads_fn(params, t, flip_mask) -> (G, honest_G): pure per-step gradient
-    computation over ALL n peers (banned rows are masked internally).
-    update_fn(params, g_hat, t) -> params: optional optimizer inner step.
-    Returns (final_state, final_params, stacked StepOutputs).
+    computation over ALL n peers (banned rows are masked internally). Build
+    it with :func:`device_data_grads_fn` to fold batch generation into the
+    scan (the fully device-resident loop: data -> grads -> attack ->
+    butterfly -> verify -> ban, one compiled program, zero per-step host
+    traffic). update_fn(params, g_hat, t) -> params: optional optimizer
+    inner step. Returns (final_state, final_params, stacked StepOutputs).
     """
     byz = jnp.asarray(byz_mask) > 0
 

@@ -87,6 +87,7 @@ class BTARDProtocol:
         seed: int = 0,
         use_pallas: bool = False,
         warm_start: bool = False,
+        adaptive_tol: float | None = None,
     ):
         self.n = n_peers
         self.d = d
@@ -111,6 +112,7 @@ class BTARDProtocol:
             clip_lambda=clip_lambda,
             use_pallas=use_pallas,
             warm_start=warm_start,
+            adaptive_tol=adaptive_tol,
         )
         self.byz_mask = jnp.asarray(
             [1.0 if i in self.byzantine else 0.0 for i in range(n_peers)],

@@ -1,5 +1,6 @@
 from repro.data.pipeline import (  # noqa: F401
     TokenPipeline,
     classification_batch,
+    peer_key,
     peer_seed,
 )

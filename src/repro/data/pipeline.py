@@ -11,9 +11,15 @@ xi_i^t, so validators can recompute anyone's gradients bit-exactly. Here the
   Byzantine experiments;
 * frame/patch embedding stubs for the audio/VLM modality frontends.
 
-``peer_seed(global_seed, step, peer)`` is the paper's xi_i^t.
+``peer_seed(global_seed, step, peer)`` is the paper's xi_i^t as a host int;
+``peer_key`` is the same chain as a pure ``jax.random`` fold-in, so the SAME
+derivation serves the host loop and the device-resident scan loop — a traced
+``device_batch(step, peer)`` is bitwise identical to a host ``batch(step,
+peer)`` (property-tested in tests/test_device_data.py).
 """
 from __future__ import annotations
+
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +27,42 @@ import numpy as np
 
 
 def peer_seed(global_seed: int, step: int, peer: int) -> int:
-    """xi_i^t — publicly derivable, collision-free peer/step seed."""
+    """xi_i^t — publicly derivable, collision-free peer/step seed (host int).
+
+    Kept for the int-seeded consumers (classification_batch). Note the
+    affine form overflows int32 for large step*peer products when evaluated
+    with fixed-width arrays — traced/device callers must use ``peer_key``,
+    which folds each coordinate independently and never multiplies.
+    """
     return (global_seed * 1_000_003 + step * 4099 + peer) % (2**31 - 1)
+
+
+def peer_key(global_seed, step, peer):
+    """xi_i^t as a PRNG key: fold_in(fold_in(key(seed), step), peer).
+
+    Pure and jit/scan-traceable (step/peer may be traced i32 scalars), no
+    int64-overflow hazard, and injective per (step, peer) by construction —
+    the derivation every pipeline path shares, so validators recomputing a
+    peer's batch on ANY path (host or in-scan) get the same bits.
+    ``global_seed`` may be an int or an already-made PRNG key (typed key
+    arrays are 0-d, so detect by dtype, not ndim).
+    """
+    if isinstance(global_seed, (int, np.integer)):
+        key = jax.random.key(global_seed)
+    else:
+        arr = jnp.asarray(global_seed)
+        key = (
+            arr
+            if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key)
+            else jax.random.key(arr)
+        )
+    return jax.random.fold_in(jax.random.fold_in(key, step), peer)
+
+
+def _stable_tag(name: str) -> int:
+    """Process-independent tag for extras streams (``hash()`` is randomized
+    per interpreter by PYTHONHASHSEED — public-seed data must not be)."""
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
 
 
 class TokenPipeline:
@@ -54,18 +94,40 @@ class TokenPipeline:
         )
         return jnp.concatenate([x0[:, None], toks.T], axis=1)  # (B, S+1)
 
-    def batch(self, step: int, peer: int = 0, *, batch_size=None, extras=None):
-        """Deterministic batch for (step, peer). extras: dict of
-        (name -> (shape_tail, dtype)) modality stubs to attach."""
+    def device_batch(self, step, peer=0, *, batch_size=None, extras=None):
+        """Deterministic batch for (step, peer) as a PURE function — step and
+        peer may be traced i32 scalars, so this generator runs INSIDE a
+        jitted ``lax.scan`` body (the device-resident training loop: no
+        host->device batch transfer per step). extras: dict of
+        (name -> (shape_tail, dtype)) modality stubs to attach.
+
+        Keyed by the public ``peer_key`` chain, so the verification-critical
+        integer ``tokens`` of a traced call are BITWISE identical to the
+        host ``batch()`` for the same (step, peer) — validators recomputing
+        a peer's gradient from the public seed are path-independent. Float
+        ``extras`` agree to 1 ulp only (XLA may fuse the normal*scale chain
+        differently across programs); archs with modality extras should
+        compare paths to f32 tolerance, not bit-for-bit.
+        """
         b = batch_size or self.B
-        key = jax.random.key(peer_seed(self.global_seed, step, peer))
+        key = peer_key(self.global_seed, step, peer)
         out = {"tokens": self._gen(key, b).astype(jnp.int32)}
         if extras:
             for name, (tail, dt) in extras.items():
                 out[name] = (
-                    jax.random.normal(jax.random.fold_in(key, hash(name) % 997), (b,) + tail) * 0.02
+                    jax.random.normal(
+                        jax.random.fold_in(key, _stable_tag(name)), (b,) + tail
+                    )
+                    * 0.02
                 ).astype(dt)
         return out
+
+    def batch(self, step: int, peer: int = 0, *, batch_size=None, extras=None):
+        """Host-loop entry point — same bits as ``device_batch`` (it IS
+        device_batch, evaluated eagerly with concrete step/peer)."""
+        return self.device_batch(
+            step, peer, batch_size=batch_size, extras=extras
+        )
 
 
 def classification_batch(seed: int, batch: int, dim: int, n_classes: int,

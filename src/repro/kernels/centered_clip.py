@@ -466,6 +466,166 @@ def butterfly_clip_fused_pallas(
 
 
 # ===========================================================================
+# Adaptive early-exit driver: ONE clip iteration per kernel invocation, the
+# incremental-norm recurrence carried BETWEEN invocations, a host-level (but
+# fully jitted) lax.while_loop deciding whether the next iteration runs.
+#
+#   prologue (jnp)     sq_i := ||x_i - v_0||^2 per partition  (1 pass of x)
+#   while ||dv|| > tol _adaptive_step_kernel: cw from sq, v += upd,
+#     and it < cap       sq := sum_b ||diff_b - upd_b||^2     (1 pass of x)
+#   epilogue           verify_tables_batched_pallas against the FINAL v,
+#                      exactly once                           (1 pass of x)
+#
+# Total: iters_run + 2 HBM passes of the stacked partitions — the fused
+# fixed-budget kernel's pass structure, but the iteration count now adapts
+# to the data (warm starts routinely land it at 1-3 instead of the
+# protocol-default 60). Converged partitions are frozen via select, exactly
+# the vmap(while_loop) batching rule, so results match per-partition
+# independent adaptive loops (and, at tol=0, the fixed-budget kernel).
+# ===========================================================================
+def _adaptive_step_kernel(
+    tau_ref, w_ref, xs_ref, vin_ref, sqin_ref, vout_ref, sqout_ref,
+    sq_ref, cw_ref,
+):
+    """Grid (n_parts, n_blocks): one CenteredClip iteration for every
+    partition. sqin holds ||x_i - v_in||^2 (the recurrence state from the
+    previous invocation); emits v_out = v_in + upd and the NEXT iteration's
+    squared norms. v carries a singleton sublane dim, sq a singleton lane
+    dim ((n_parts, n, 1) with (1, n, 1) blocks — the (n, 1) layout of the
+    w operand, legal native tiles per DESIGN.md)."""
+    blk = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _weights():
+        tau = tau_ref[0, 0]
+        norms = jnp.sqrt(jnp.maximum(sqin_ref[0], 1e-30))
+        cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
+        cw = jnp.where(jnp.isinf(tau), 1.0, cw)
+        cw_ref[...] = cw * w_ref[...].astype(jnp.float32)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    wsum = jnp.maximum(jnp.sum(w_ref[...].astype(jnp.float32)), 1e-30)
+    diff = xs_ref[0].astype(jnp.float32) - vin_ref[0].astype(jnp.float32)
+    upd = jnp.sum(cw_ref[...] * diff, axis=0, keepdims=True) / wsum
+    vout_ref[0] = vin_ref[0].astype(jnp.float32) + upd
+    nd = diff - upd  # x_i - v_{l+1} restricted to this block
+    sq_ref[...] += jnp.sum(nd * nd, axis=1, keepdims=True)
+
+    @pl.when(blk == nb - 1)
+    def _emit():
+        sqout_ref[0] = sq_ref[...].reshape(sqout_ref.shape[1:])
+
+
+def adaptive_clip_step_pallas(
+    parts, v, sq, tau, weights=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """One all-partition CenteredClip iteration (single HBM pass of parts).
+
+    parts: (n_parts, n, part) (pre-padded to a block multiple);
+    v: (n_parts, 1, part); sq: (n_parts, n, 1) = ||x_i - v||^2.
+    Returns (v_new, sq_new) in the same layouts.
+    """
+    n_parts, n, dp = parts.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, dp))
+    if dp % blk:
+        raise ValueError(
+            f"adaptive step kernel needs part dim {dp} pre-padded to a "
+            f"multiple of block {blk} (the while driver pads before looping)"
+        )
+    n_blocks = dp // blk
+
+    tau2 = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _adaptive_step_kernel,
+        grid=(n_parts, n_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((n, 1), lambda p, b: (0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, n, 1), lambda p, b: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, n, 1), lambda p, b: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, n, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tau2, w2, parts, v, sq)
+
+
+def butterfly_clip_adaptive_pallas(
+    parts, tau, tol, max_iters: int, weights=None, v0=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """Early-exit all-partition CenteredClip: iterate the one-pass step
+    kernel under ``lax.while_loop`` until every partition's update norm is
+    <= tol (or ``max_iters``). Converged partitions freeze (select), so
+    per-partition results equal independent adaptive loops.
+
+    parts: (n_parts, n_peers, part). Returns (agg (n_parts, part) f32,
+    iters (n_parts,) i32). The verification-table epilogue is NOT included
+    — callers (kernels/ops.butterfly_clip_fused_adaptive_op) run it exactly
+    once against the returned aggregate.
+    """
+    n_parts, n, d = parts.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        if v0 is not None:
+            v0 = jnp.pad(v0, ((0, 0), (0, dp - d)))
+    parts = parts.astype(jnp.float32)
+
+    v = (
+        jnp.zeros((n_parts, 1, dp), jnp.float32)
+        if v0 is None
+        else v0.astype(jnp.float32).reshape(n_parts, 1, dp)
+    )
+    # prologue: the recurrence state for the starting iterate (1 pass of x)
+    sq = jnp.sum((parts - v) ** 2, axis=-1, keepdims=True)  # (n_parts, n, 1)
+    tol2 = jnp.float32(tol) ** 2
+
+    def cond(carry):
+        _, _, d2, it, _ = carry
+        return jnp.logical_and((d2 > tol2).any(), it < max_iters)
+
+    def body(carry):
+        v, sq, d2, it, iters = carry
+        v_new, sq_new = adaptive_clip_step_pallas(
+            parts, v, sq, tau, weights, block=blk, interpret=interpret
+        )
+        active = d2 > tol2  # (n_parts,) — frozen partitions keep their carry
+        upd2 = ((v_new - v) ** 2).sum(axis=(1, 2))
+        v = jnp.where(active[:, None, None], v_new, v)
+        sq = jnp.where(active[:, None, None], sq_new, sq)
+        d2 = jnp.where(active, upd2, d2)
+        return v, sq, d2, it + 1, iters + active.astype(jnp.int32)
+
+    v, _, _, _, iters = jax.lax.while_loop(
+        cond,
+        body,
+        (v, sq, jnp.full((n_parts,), jnp.inf, jnp.float32), jnp.int32(0),
+         jnp.zeros((n_parts,), jnp.int32)),
+    )
+    return v[:, 0, :d], iters
+
+
+# ===========================================================================
 # Fused verification-tables kernel (single HBM pass)
 # ===========================================================================
 def _vt_kernel(tau_ref, xs_ref, v_ref, z_ref, s_ref, norm_ref, dot_ref, sq_ref):

@@ -84,6 +84,48 @@ def butterfly_clip_fused_op(
     return agg, s.T, norms.T
 
 
+# ---------------------------------------------------------------------------
+# Adaptive early-exit family: one-pass-per-iteration step kernel under a
+# lax.while_loop, stopping at ||v_{l+1}-v_l|| <= tol with a static max_iters
+# cap; the verification-table epilogue runs exactly ONCE against the final
+# iterate. iters_run + 2 HBM passes of the stack vs n_iters + 2 fixed.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("max_iters", "block"))
+def butterfly_clip_adaptive_op(
+    parts, tau, tol, weights=None, v0=None, *,
+    max_iters: int = 60, block: int = _k.DEFAULT_BLOCK
+):
+    """Kernel-backed adaptive all-partition ButterflyClip aggregation:
+    parts (n_parts, n_peers, part) -> (agg (n_parts, part),
+    iters (n_parts,) i32). v0: optional warm start (previous aggregate)."""
+    return _k.butterfly_clip_adaptive_pallas(
+        parts, tau, tol, max_iters, weights, v0,
+        block=block, interpret=_INTERPRET,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "block"))
+def butterfly_clip_fused_adaptive_op(
+    parts, tau, z, tol, weights=None, v0=None, *,
+    max_iters: int = 60, block: int = _k.DEFAULT_BLOCK
+):
+    """Adaptive aggregation + Alg. 6 broadcast tables: the early-exit
+    iteration driver followed by ONE verification-table pass against the
+    final aggregate (deterministic however many iterations ran).
+
+    Returns (agg (n_parts, part), s (n_peers, n_parts),
+    norms (n_peers, n_parts), iters (n_parts,) i32) — s/norms in the
+    (peer, partition) layout of core.butterfly.verification_tables."""
+    agg, iters = _k.butterfly_clip_adaptive_pallas(
+        parts, tau, tol, max_iters, weights, v0,
+        block=block, interpret=_INTERPRET,
+    )
+    s, norms = _k.verify_tables_batched_pallas(
+        parts, agg, z, tau, block=block, interpret=_INTERPRET
+    )
+    return agg, s.T, norms.T, iters
+
+
 @functools.partial(jax.jit, static_argnames=("block",))
 def verify_tables_all_op(parts, agg, z, tau, *, block: int = _k.DEFAULT_BLOCK):
     """Kernel-backed all-partition verification tables (one pass of parts):

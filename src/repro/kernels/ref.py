@@ -64,6 +64,28 @@ def centered_clip_fused_ref(xs, taus, z, tau_v=None, weights=None):
     return v, cwv * dots, norms
 
 
+def adaptive_step_ref(xs, v, sq, tau, weights=None):
+    """Reference for ONE adaptive-driver iteration (the step kernel).
+
+    xs: (n, d); v: (d,); sq: (n,) = ||x_i - v||^2 (the carried recurrence
+    state). Returns (v_new (d,), sq_new (n,)) f32 — clip weights come from
+    the CARRIED sq, the next sq from the incremental recurrence, exactly the
+    kernel's dataflow.
+    """
+    xs = xs.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    n = xs.shape[0]
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    wsum = jnp.maximum(w.sum(), 1e-30)
+    norms = jnp.sqrt(jnp.maximum(sq, 1e-30))
+    cw = jnp.minimum(1.0, jnp.float32(tau) / jnp.maximum(norms, 1e-30))
+    cw = jnp.where(jnp.isinf(jnp.float32(tau)), 1.0, cw) * w
+    diff = xs - v[None, :]
+    upd = (cw[:, None] * diff).sum(0) / wsum
+    nd = diff - upd[None, :]
+    return v + upd, jnp.sum(nd * nd, axis=1)
+
+
 def verify_tables_ref(xs, v, z, tau):
     """Reference fused verification scalars.
 

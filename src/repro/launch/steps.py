@@ -24,7 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.centered_clip import centered_clip, clip_residuals
+from repro.core.centered_clip import (
+    centered_clip,
+    centered_clip_adaptive,
+    clip_residuals,
+)
 from repro.launch import input_specs as ispecs
 from repro.models import Model
 from repro.optim.optimizers import apply_updates
@@ -149,7 +153,7 @@ def _collapse_peer_mesh(mesh):
 
 def butterfly_stage(
     g_vec, peer_axes, n_peers, tau, clip_iters, weights, seed, use_pallas=False,
-    delta_max=None, v0_full=None,
+    delta_max=None, v0_full=None, adaptive_tol=None,
 ):
     """Fully-manual-region butterfly robust all-reduce of one local gradient
     vector. Returns (aggregated vector, verification dict).
@@ -161,6 +165,13 @@ def butterfly_stage(
     v0_full: optional (d,) previous aggregated vector (replicated — every
     peer holds it after last step's all_gather); each peer warm-starts its
     partition's CenteredClip from its slice, cutting clip_iters (DESIGN.md).
+
+    adaptive_tol: when set, each peer's CenteredClip iterates only until
+    ||v_{l+1}-v_l|| <= adaptive_tol (clip_iters becomes the static cap) —
+    per-device while_loops with data-dependent trip counts are fine in the
+    manual region because the loop body contains no collectives; the
+    verification tables are computed exactly once against the final iterate,
+    so the broadcast protocol is budget-oblivious.
     """
     d = g_vec.shape[0]
     part = -(-d // n_peers)
@@ -190,7 +201,21 @@ def butterfly_stage(
             )
         v0 = v0_full.reshape(n_peers, part)[my_idx].astype(jnp.float32)
 
-    if use_pallas:
+    iters_used = jnp.asarray(clip_iters, jnp.int32)
+    if adaptive_tol is not None and use_pallas:
+        from repro.kernels.ops import butterfly_clip_adaptive_op, verify_tables_op
+
+        # early-exit one-pass-per-iteration driver (single-partition batch),
+        # then ONE verification-table pass against the final iterate
+        agg_b, iters = butterfly_clip_adaptive_op(
+            recv[None], tau, adaptive_tol, weights,
+            v0=None if v0 is None else v0[None], max_iters=clip_iters,
+        )
+        agg, iters_used = agg_b[0], iters[0]
+        s_local, norms_local = verify_tables_op(
+            recv, agg, z.astype(jnp.float32), tau
+        )
+    elif use_pallas:
         from repro.kernels.ops import centered_clip_fused_op
 
         # fused one-pass-per-iteration kernel: aggregate + s_i = <z, Delta_i>
@@ -199,9 +224,14 @@ def butterfly_stage(
             recv, tau, z.astype(jnp.float32), weights, v0=v0, n_iters=clip_iters
         )
     else:
-        agg = centered_clip(
-            recv, tau=tau, n_iters=clip_iters, weights=weights, v0=v0
-        )
+        if adaptive_tol is not None:
+            agg, iters_used = centered_clip_adaptive(
+                recv, tau, adaptive_tol, clip_iters, weights=weights, v0=v0
+            )
+        else:
+            agg = centered_clip(
+                recv, tau=tau, n_iters=clip_iters, weights=weights, v0=v0
+            )
         agg = agg.astype(jnp.float32)
         deltas = clip_residuals(recv.astype(jnp.float32), agg, tau)
         s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
@@ -224,6 +254,7 @@ def butterfly_stage(
     verif = {
         "checksum": checksum[None],
         "votes": jnp.asarray(votes)[None],
+        "clip_iters": jnp.asarray(iters_used, jnp.int32)[None],
         "s_table": s_table,
         "norm_table": norm_table,
     }
@@ -269,6 +300,7 @@ def _build_btard_step(
     zero1: bool = True,
     transport_dtype=jnp.float32,
     warm_start: bool = False,
+    adaptive_tol: float | None = None,
 ):
     """Shared construction for the single-step and scanned BTARD steps.
 
@@ -335,6 +367,7 @@ def _build_btard_step(
         agg_vec, verif = butterfly_stage(
             vec, peer_axes, n_peers, tau, clip_iters, weights, seed,
             use_pallas=use_pallas, delta_max=delta_max, v0_full=v0_full,
+            adaptive_tol=adaptive_tol,
         )
         agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
         agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
@@ -354,6 +387,7 @@ def _build_btard_step(
             {
                 "checksum": P(peer_axes),
                 "votes": P(peer_axes),
+                "clip_iters": P(peer_axes),
                 "s_table": P(None, None),
                 "norm_table": P(None, None),
             },
@@ -374,6 +408,7 @@ def _build_btard_step(
             "loss": loss.mean(),
             "checksum_max": verif["checksum"].max(),
             "votes_max": verif["votes"].max(),
+            "clip_iters_max": verif["clip_iters"].max(),
         }
         return params, opt_state, metrics, verif, agg
 
@@ -420,6 +455,7 @@ def make_btard_train_step(
     delta_max: float | None = 1e9,
     zero1: bool = True,
     transport_dtype=jnp.float32,
+    adaptive_tol: float | None = None,
 ):
     """Returns (jitted step, abstract args).
 
@@ -434,6 +470,7 @@ def make_btard_train_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=False,
+        adaptive_tol=adaptive_tol,
     )
 
     def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
@@ -475,60 +512,110 @@ def make_btard_scan_train_step(
     zero1: bool = True,
     transport_dtype=jnp.float32,
     warm_start: bool = False,
+    adaptive_tol: float | None = None,
+    pipeline=None,
+    extras=None,
 ):
     """The BTARD train step under ``lax.scan``: ``n_scan_steps`` full rounds
     per dispatch, one compiled program, zero host sync between rounds.
 
-    step(params, opt_state, batches, steps, seeds, byz_mask, weights, v_prev)
-      -> (params, opt_state, metrics, verif, v_last)
+    Host-batch mode (pipeline=None):
+      step(params, opt_state, batches, steps, seeds, byz_mask, weights,
+      v_prev) -> (params, opt_state, metrics, verif, v_last)
+      batches: the single-step batch tree with a leading (n_scan_steps,) dim.
 
-    batches: the single-step batch tree with a leading (n_scan_steps,) dim;
+    Device-resident mode (pipeline = a ``repro.data.TokenPipeline``):
+      step(params, opt_state, steps, seeds, byz_mask, weights, v_prev)
+      Each round's batch is generated INSIDE the scan body from the public
+      ``peer_key`` chain (``pipeline.device_batch``) and sharded to the
+      batch specs — zero host->device batch bytes per step, and the bits
+      match the host pipeline exactly (tests/test_device_data.py), so
+      verification/accusation semantics are unchanged.
+
     steps / seeds: (n_scan_steps,) i32. v_prev / v_last: the aggregate tree
     (zeros_like(params) to start) — with ``warm_start`` each round's
     CenteredClip starts from the previous round's aggregate, which cuts the
     iteration budget (see kernels/DESIGN.md); without it the carry is
-    threaded but unused. metrics / verif gain a leading scan dim.
+    threaded but unused. ``adaptive_tol`` makes that saving automatic: the
+    clip loop early-exits at ||v_{l+1}-v_l|| <= tol (clip_iters = cap).
+    metrics / verif gain a leading scan dim.
     Returns (jitted step, abstract args).
     """
     step_core, mesh, specs, abstract_args = _build_btard_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=warm_start,
+        adaptive_tol=adaptive_tol,
+    )
+    agg_shardings = _named(mesh, specs["agg"])
+    # the in-scan generator is pinned REPLICATED: every peer generates the
+    # full public batch and slices its share — the paper's public-data model
+    # (any peer recomputes any batch), and the only sharding under which the
+    # non-partitionable threefry PRNG emits the SAME bits as the host
+    # pipeline (GSPMD partitioning of the generator changes random bits;
+    # tested in tests/test_device_data.py). Generation cost is trivial next
+    # to fwd+bwd; the peer-sharded consumer reshards with a local slice.
+    replicated_batch = jax.tree.map(
+        lambda s: NamedSharding(mesh, P()), specs["batch"], is_leaf=_is_p
     )
 
-    def scan_step(params, opt_state, batches, steps, seeds, byz_mask,
-                  weights, v_prev):
+    def body_of(batch_for, byz_mask, weights):
         def body(carry, xs):
             params, opt_state, v_prev = carry
-            batch, step, seed = xs
+            step, seed = xs[-2], xs[-1]
+            batch = batch_for(xs)
             params, opt_state, metrics, verif, agg = step_core(
                 params, opt_state, batch, step, seed, byz_mask, weights,
                 v_prev=v_prev,
             )
             return (params, opt_state, agg), (metrics, verif)
 
-        (params, opt_state, v_last), (metrics, verif) = jax.lax.scan(
-            body, (params, opt_state, v_prev), (batches, steps, seeds)
-        )
-        return params, opt_state, metrics, verif, v_last
+        return body
 
-    agg_shardings = _named(mesh, specs["agg"])
-    # stacked batches: leading scan dim replicated, per-step dims as before
-    scan_bspecs = jax.tree.map(
-        lambda s: P(None, *s), specs["batch"], is_leaf=_is_p
-    )
+    if pipeline is not None:
+
+        def scan_step(params, opt_state, steps, seeds, byz_mask, weights,
+                      v_prev):
+            def batch_for(xs):
+                # the in-scan data phase: public-seed batch for this round,
+                # generated on device (replicated — see replicated_batch)
+                batch = pipeline.device_batch(xs[-2], extras=extras)
+                return jax.tree.map(
+                    jax.lax.with_sharding_constraint, batch, replicated_batch
+                )
+
+            (params, opt_state, v_last), (metrics, verif) = jax.lax.scan(
+                body_of(batch_for, byz_mask, weights),
+                (params, opt_state, v_prev), (steps, seeds),
+            )
+            return params, opt_state, metrics, verif, v_last
+
+        in_shardings = (
+            _named(mesh, specs["params"]), _named(mesh, specs["opt"]),
+            None, None, None, None, agg_shardings,
+        )
+    else:
+
+        def scan_step(params, opt_state, batches, steps, seeds, byz_mask,
+                      weights, v_prev):
+            (params, opt_state, v_last), (metrics, verif) = jax.lax.scan(
+                body_of(lambda xs: xs[0], byz_mask, weights),
+                (params, opt_state, v_prev), (batches, steps, seeds),
+            )
+            return params, opt_state, metrics, verif, v_last
+
+        # stacked batches: leading scan dim replicated, per-step as before
+        scan_bspecs = jax.tree.map(
+            lambda s: P(None, *s), specs["batch"], is_leaf=_is_p
+        )
+        in_shardings = (
+            _named(mesh, specs["params"]), _named(mesh, specs["opt"]),
+            _named(mesh, scan_bspecs), None, None, None, None, agg_shardings,
+        )
+
     jitted = jax.jit(
         scan_step,
-        in_shardings=(
-            _named(mesh, specs["params"]),
-            _named(mesh, specs["opt"]),
-            _named(mesh, scan_bspecs),
-            None,
-            None,
-            None,
-            None,
-            agg_shardings,
-        ),
+        in_shardings=in_shardings,
         out_shardings=(
             _named(mesh, specs["params"]), _named(mesh, specs["opt"]),
             None, None, agg_shardings,
@@ -538,18 +625,16 @@ def make_btard_scan_train_step(
     stack = lambda tree: jax.tree.map(
         lambda l: jax.ShapeDtypeStruct((n_scan_steps,) + l.shape, l.dtype), tree
     )
-    scan_abstract = (
-        p_abs,
-        o_abs,
-        stack(b_abs),
-        jax.ShapeDtypeStruct((n_scan_steps,), jnp.int32),
-        jax.ShapeDtypeStruct((n_scan_steps,), jnp.int32),
-        byz_abs,
-        w_abs,
-        jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), p_abs
-        ),
+    steps_abs = jax.ShapeDtypeStruct((n_scan_steps,), jnp.int32)
+    v_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), p_abs
     )
+    if pipeline is not None:
+        scan_abstract = (p_abs, o_abs, steps_abs, steps_abs, byz_abs, w_abs,
+                         v_abs)
+    else:
+        scan_abstract = (p_abs, o_abs, stack(b_abs), steps_abs, steps_abs,
+                         byz_abs, w_abs, v_abs)
     return jitted, scan_abstract
 
 

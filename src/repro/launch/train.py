@@ -10,9 +10,12 @@ Examples (CPU bring-up, 8 fake devices):
       --host-devices 8 --mesh 4x2 --steps 20 --defense btard
   python -m repro.launch.train --arch mamba2-2.7b --reduced --host-devices 8 \\
       --mesh 4x2 --steps 10 --attack sign_flip --byzantine 1,3
-  # scan engine: 5 rounds per compiled dispatch, warm-started CenteredClip
+  # device-resident scan loop: 5 rounds per compiled dispatch, batches
+  # generated IN-SCAN from the public seed chain, warm-started CenteredClip
+  # with the adaptive early-exit budget
   python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 8 \\
-      --mesh 4x2 --steps 20 --scan-steps 5 --warm-start-clip
+      --mesh 4x2 --steps 20 --scan-steps 5 --warm-start-clip \\
+      --adaptive-clip 1e-4
 """
 import argparse
 import os
@@ -44,6 +47,14 @@ def main():
     ap.add_argument("--warm-start-clip", action="store_true",
                     help="CenteredClip v0 = previous aggregate "
                          "(implies the scan step; see kernels/DESIGN.md)")
+    ap.add_argument("--adaptive-clip", type=float, default=None, metavar="TOL",
+                    help="adaptive CenteredClip: stop when ||v_{l+1}-v_l|| "
+                         "<= TOL (--clip-iters becomes the static cap); "
+                         "composes with --warm-start-clip")
+    ap.add_argument("--host-data", action="store_true",
+                    help="feed host-precomputed batches to the scan step "
+                         "instead of generating them in-scan on device "
+                         "(the default scan path is fully device-resident)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
@@ -82,29 +93,37 @@ def main():
     opt = sgd(args.lr, momentum=0.9, nesterov=True)
     n_peers = int(np.prod([mesh.shape[a] for a in names if a != "model"]))
 
-    n_scan = max(args.scan_steps, 1 if args.warm_start_clip else 0)
-    if args.defense == "btard" and n_scan:
-        step_fn, _ = make_btard_scan_train_step(
-            model, opt, mesh, shape, n_scan_steps=n_scan, tau=args.tau,
-            clip_iters=args.clip_iters, attack=args.attack,
-            use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
-        )
-    elif args.defense == "btard":
-        step_fn, _ = make_btard_train_step(
-            model, opt, mesh, shape, tau=args.tau, clip_iters=args.clip_iters,
-            attack=args.attack, use_pallas=args.use_pallas,
-        )
-    else:
-        step_fn, _ = make_baseline_train_step(model, opt, mesh, shape)
-
-    params = model.init_params(jax.random.key(0))
-    opt_state = opt.init(params)
     extras = None
     if model.cfg.encoder_len:
         extras = {
             "memory_raw": ((model.cfg.encoder_len, model.cfg.encoder_dim), jnp.float32)
         }
     pipe = TokenPipeline(model.cfg.vocab_size, args.seq, args.batch)
+
+    n_scan = max(args.scan_steps, 1 if args.warm_start_clip else 0)
+    # the scan path is device-resident by default: batches come from the
+    # public peer_key chain INSIDE the compiled scan (same bits as the host
+    # pipeline), so each dispatch moves only two (n_scan,) i32 vectors
+    device_data = bool(n_scan) and not args.host_data
+    if args.defense == "btard" and n_scan:
+        step_fn, _ = make_btard_scan_train_step(
+            model, opt, mesh, shape, n_scan_steps=n_scan, tau=args.tau,
+            clip_iters=args.clip_iters, attack=args.attack,
+            use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
+            adaptive_tol=args.adaptive_clip,
+            pipeline=pipe if device_data else None, extras=extras,
+        )
+    elif args.defense == "btard":
+        step_fn, _ = make_btard_train_step(
+            model, opt, mesh, shape, tau=args.tau, clip_iters=args.clip_iters,
+            attack=args.attack, use_pallas=args.use_pallas,
+            adaptive_tol=args.adaptive_clip,
+        )
+    else:
+        step_fn, _ = make_baseline_train_step(model, opt, mesh, shape)
+
+    params = model.init_params(jax.random.key(0))
+    opt_state = opt.init(params)
 
     byz = set(int(x) for x in args.byzantine.split(",") if x)
     byz_mask = jnp.asarray(
@@ -116,7 +135,9 @@ def main():
 
     print(f"arch={model.cfg.name} params={model.param_count():,} "
           f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)} "
-          f"scan={n_scan or '-'} warm={args.warm_start_clip}")
+          f"scan={n_scan or '-'} warm={args.warm_start_clip} "
+          f"adaptive={args.adaptive_clip or '-'} "
+          f"data={'device' if device_data else 'host'}")
     t0 = time.time()
     if args.defense == "btard" and n_scan:
         v_prev = jax.tree.map(jnp.zeros_like, params)
@@ -128,20 +149,29 @@ def main():
                 model, opt, mesh, shape, n_scan_steps=rem, tau=args.tau,
                 clip_iters=args.clip_iters, attack=args.attack,
                 use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
+                adaptive_tol=args.adaptive_clip,
+                pipeline=pipe if device_data else None, extras=extras,
             )
         for chunk in range(0, args.steps, n_scan):
             idxs = list(range(chunk, min(chunk + n_scan, args.steps)))
             if len(idxs) < n_scan:
                 step_fn = rem_fn
-            batches = jax.tree.map(
-                lambda *ls: jnp.stack(ls),
-                *[pipe.batch(s, extras=extras) for s in idxs],
-            )
             steps_arr = jnp.asarray(idxs, jnp.int32)
             seeds = jnp.asarray([s * 7919 + 13 for s in idxs], jnp.int32)
-            params, opt_state, metrics, verif, v_prev = step_fn(
-                params, opt_state, batches, steps_arr, seeds, byz_mask, weights
-            , v_prev)
+            if device_data:
+                params, opt_state, metrics, verif, v_prev = step_fn(
+                    params, opt_state, steps_arr, seeds, byz_mask, weights,
+                    v_prev,
+                )
+            else:
+                batches = jax.tree.map(
+                    lambda *ls: jnp.stack(ls),
+                    *[pipe.batch(s, extras=extras) for s in idxs],
+                )
+                params, opt_state, metrics, verif, v_prev = step_fn(
+                    params, opt_state, batches, steps_arr, seeds, byz_mask,
+                    weights, v_prev,
+                )
             # ban policy applied between dispatches from the LAST round's
             # checksums (mid-chunk rounds share the chunk's weights)
             bad = bf.checksum_offender_peers(verif["checksum"][-1])

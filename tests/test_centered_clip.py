@@ -123,3 +123,123 @@ def test_property_within_convex_hull_bound(n, d, seed):
         assert float(jnp.linalg.norm(v)) <= float(
             jnp.linalg.norm(xs, axis=1).max()
         ) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Adaptive (while_loop) CenteredClip — the early-exit budget
+# ---------------------------------------------------------------------------
+def test_adaptive_tol_zero_bitwise_equals_fixed():
+    """tol=0 runs the full cap through the SHARED update rule — the
+    aggregate is bitwise the fixed-budget result (stacked and single)."""
+    from repro.core.centered_clip import (
+        centered_clip_adaptive,
+        centered_clip_adaptive_stacked,
+        centered_clip_stacked,
+    )
+
+    stacked = jax.random.normal(jax.random.key(5), (6, 10, 48))
+    w = jnp.ones((10,)).at[4].set(0.0)
+    fixed = centered_clip_stacked(stacked, 1.3, n_iters=17, weights=w)
+    adapt, iters = centered_clip_adaptive_stacked(
+        stacked, 1.3, 0.0, 17, weights=w
+    )
+    np.testing.assert_array_equal(np.asarray(adapt), np.asarray(fixed))
+    assert np.all(np.asarray(iters) == 17)
+
+    xs = _rand(9, 33, seed=7)
+    v_fixed = centered_clip(xs, 0.8, n_iters=11)
+    v_adapt, it = centered_clip_adaptive(xs, 0.8, 0.0, 11)
+    np.testing.assert_array_equal(np.asarray(v_adapt), np.asarray(v_fixed))
+
+
+def test_stacked_fixed_equals_vmap_single():
+    """The shared stacked update is the SAME computation as
+    vmap(centered_clip) — the fixed path's refactor is observationally
+    identical."""
+    from repro.core.centered_clip import centered_clip_stacked
+
+    stacked = jax.random.normal(jax.random.key(9), (5, 8, 40))
+    w = jnp.ones((8,)).at[1].set(0.0)
+    vmapped = jax.vmap(
+        lambda xs: centered_clip(xs, tau=1.1, n_iters=13, weights=w)
+    )(stacked)
+    shared = centered_clip_stacked(stacked, 1.1, n_iters=13, weights=w)
+    np.testing.assert_array_equal(np.asarray(shared), np.asarray(vmapped))
+
+
+def test_adaptive_early_exit_same_fixed_point():
+    """With a real tolerance the loop exits early (iters << cap) and lands
+    within tol of the converged fixed point; warm starting from a nearby
+    aggregate cuts the count further (the compounding the engine exploits)."""
+    from repro.core.centered_clip import centered_clip_adaptive
+
+    mu = jax.random.normal(jax.random.key(1), (64,)) * 3.0
+    xs = mu + _rand(12, 64, seed=2, scale=0.5)
+    ref, _ = centered_clip_to_tol(xs, 5.0, eps=1e-8, max_iters=5000)
+    v, iters = centered_clip_adaptive(xs, 5.0, 1e-5, 500)
+    assert int(iters) < 100
+    assert float(jnp.linalg.norm(v - ref)) < 1e-3
+    v_w, it_w = centered_clip_adaptive(xs, 5.0, 1e-5, 500, v0=ref)
+    assert int(it_w) <= int(iters)
+    np.testing.assert_allclose(np.asarray(v_w), np.asarray(ref), atol=1e-3)
+
+
+def test_adaptive_frozen_partitions_match_independent_runs():
+    """Partitions converge at different speeds; the joint while_loop freezes
+    finished ones, so per-partition results equal fully independent loops."""
+    from repro.core.centered_clip import (
+        centered_clip_adaptive,
+        centered_clip_adaptive_stacked,
+    )
+
+    fast = jnp.broadcast_to(
+        jax.random.normal(jax.random.key(3), (48,)), (10, 48)
+    ) + 0.01 * _rand(10, 48, seed=4)
+    slow = _rand(10, 48, seed=5, scale=10.0)
+    stacked = jnp.stack([fast, slow])
+    v, iters = centered_clip_adaptive_stacked(stacked, 2.0, 1e-5, 300)
+    assert int(iters[0]) < int(iters[1])
+    for j in range(2):
+        v_j, it_j = centered_clip_adaptive(stacked[j], 2.0, 1e-5, 300)
+        np.testing.assert_array_equal(np.asarray(v[j]), np.asarray(v_j))
+        assert int(iters[j]) == int(it_j)
+
+
+def test_adaptive_pallas_driver_matches_jnp():
+    """The early-exit kernel driver (one HBM pass per iteration + carried
+    recurrence) tracks the jnp while_loop within f32 tolerance, with the
+    same iteration counts."""
+    from repro.core.centered_clip import centered_clip_adaptive_stacked
+    from repro.kernels.ops import butterfly_clip_adaptive_op
+
+    stacked = jax.random.normal(jax.random.key(11), (4, 8, 200))
+    w = jnp.ones((8,)).at[3].set(0.0)
+    v0 = 0.05 * jax.random.normal(jax.random.key(12), (4, 200))
+    agg_k, it_k = butterfly_clip_adaptive_op(
+        stacked, 2.0, 1e-6, w, v0=v0, max_iters=200
+    )
+    agg_j, it_j = centered_clip_adaptive_stacked(
+        stacked, 2.0, 1e-6, 200, weights=w, v0=v0
+    )
+    np.testing.assert_allclose(
+        np.asarray(agg_k), np.asarray(agg_j), atol=1e-4
+    )
+    np.testing.assert_array_equal(np.asarray(it_k), np.asarray(it_j))
+
+
+def test_adaptive_verified_epilogue_deterministic():
+    """The verification tables depend only on (parts, agg, z) — running the
+    adaptive aggregation at different caps that reach the same iterate gives
+    identical tables (the budget is invisible to the broadcast protocol)."""
+    from repro.core import butterfly as bf
+
+    g = _rand(8, 8 * 40, seed=13)
+    z = bf.get_random_directions(3, 8, 40)
+    agg1, _, s1, n1, it1 = bf.butterfly_clip_verified_adaptive(
+        g, 2.0, z, 1e-7, 500
+    )
+    agg2, _, s2, n2, it2 = bf.butterfly_clip_verified_adaptive(
+        g, 2.0, z, 1e-7, 600
+    )
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))

@@ -283,3 +283,129 @@ def test_engine_pallas_path_matches_jnp():
         _, out = eng.jit_protocol_step(cfg)(state, byz_mask, G, H)
         outs[pallas] = np.asarray(out.g_hat)
     np.testing.assert_allclose(outs[True], outs[False], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive CenteredClip budget (engine-side early exit)
+# ---------------------------------------------------------------------------
+def test_engine_adaptive_tol_zero_reproduces_fixed_exactly():
+    """adaptive_tol=0.0 runs the full cap through the shared update rule:
+    aggregates BITWISE equal, bans/accusations identical — the fixed path is
+    a special case of the adaptive one."""
+    attack = AttackConfig(kind="sign_flip", start_step=2, lam=100.0)
+    _, outs_fixed = _run_scan(attack)
+    _, outs_adapt = _run_scan(attack, adaptive_tol=0.0)
+    np.testing.assert_array_equal(
+        np.asarray(outs_adapt.g_hat), np.asarray(outs_fixed.g_hat)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_adapt.banned_now), np.asarray(outs_fixed.banned_now)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_adapt.accuse_mat), np.asarray(outs_fixed.accuse_mat)
+    )
+    assert np.all(np.asarray(outs_adapt.clip_iters_used) == 60)
+
+
+@pytest.mark.parametrize("kind", ["sign_flip", "ipm_06", "label_flip"])
+def test_engine_adaptive_matches_legacy_wrapper(kind):
+    """The acceptance property: a scanned adaptive+warm run produces the
+    SAME bans/accusations as the host-pipeline fixed-iter wrapper and
+    f32-tolerance aggregates — in the regime where the clip CONVERGES
+    within the cap (tau comparable to the gradient scale; the early exit
+    then lands on the unique fixed point the fixed budget also reaches).
+    With the cap binding instead (unconverged), only the cold path is
+    bitwise comparable — covered by the tol=0 test above."""
+    tau = 25.0
+    attack = AttackConfig(kind=kind, start_step=2, lam=100.0)
+
+    peer_grad, grads_fn = _make_grads()
+    jitted = jax.jit(grads_fn)
+
+    def host_grad(i, t, params, flipped=False):
+        flips = jnp.zeros((N,), bool).at[i].set(bool(flipped))
+        G, _ = jitted(jnp.asarray(params, jnp.float32), t, flips)
+        return np.asarray(G[i])
+
+    proto = BTARDProtocol(
+        n_peers=N, d=D, grad_fn=host_grad, byzantine=set(BYZ),
+        attack=attack, tau=tau, m_validators=2, seed=0,
+    )
+    params = np.zeros(D, np.float32)
+    g_hats, bans_wrap, acc_wrap = [], [], []
+    for t in range(STEPS):
+        g, info = proto.step(params, t)
+        params = params - 0.05 * g
+        g_hats.append(g)
+        bans_wrap.append(sorted(p for p, _ in info.banned_now))
+        acc_wrap.append(
+            sorted((a, b) for a, b, _, _ in info.accusations if a is not None)
+        )
+    g_wrap = np.stack(g_hats)
+
+    cfg = eng.config_from_attack(
+        N, D, attack, tau=tau, clip_iters=60, m_validators=2,
+        adaptive_tol=1e-6, warm_start=True,
+    )
+    state = eng.init_state(cfg, seed=0)
+    byz_mask = jnp.asarray([1.0 if i in BYZ else 0.0 for i in range(N)])
+    runner = jax.jit(
+        lambda s, b, p: eng.scan_protocol(
+            cfg, s, b, p, grads_fn, STEPS, lambda p, g, t: p - 0.05 * g
+        )
+    )
+    state, _, outs = runner(state, byz_mask, jnp.zeros(D, jnp.float32))
+
+    banned_scan = {
+        int(i) for i in np.nonzero(np.asarray(state.ban_step) >= 0)[0]
+    }
+    assert banned_scan == proto.banned, (kind, banned_scan, proto.banned)
+    assert banned_scan, f"{kind}: attack never triggered a ban"
+    banned_now = np.asarray(outs.banned_now)
+    for t in range(STEPS):
+        assert sorted(np.nonzero(banned_now[t])[0].tolist()) == bans_wrap[t], t
+    acc_scan = np.asarray(outs.accuse_mat)
+    for t in range(STEPS):
+        pairs = sorted(
+            (int(v), int(u)) for v, u in zip(*np.nonzero(acc_scan[t]))
+        )
+        assert pairs == acc_wrap[t], (kind, t)
+    used = np.asarray(outs.clip_iters_used)
+    assert used.max() < 60, used  # the early exit actually triggered
+    scale = np.abs(g_wrap).max(axis=1, keepdims=True) + 1.0
+    np.testing.assert_allclose(
+        np.asarray(outs.g_hat) / scale, g_wrap / scale, atol=2e-4
+    )
+
+
+def test_engine_adaptive_reports_budget_and_early_exits():
+    """clip_iters_used surfaces the real per-step budget; in the no-attack
+    slow-drift regime with warm start it early-exits far below the cap."""
+    w_true = jax.random.normal(jax.random.key(9), (D,))
+
+    def peer_grad(peer, params):
+        k = jax.random.key(peer * 7919 + 17)
+        X = jax.random.normal(k, (4, D))
+        return 2 * X.T @ (X @ params - X @ w_true) / 4
+
+    def grads_fn(params, t, flips):
+        G = jax.vmap(lambda i: peer_grad(i, params))(jnp.arange(N))
+        return G, G
+
+    cfg = eng.config_from_attack(
+        N, D, AttackConfig(kind="none"), tau=100.0, clip_iters=60,
+        m_validators=0, warm_start=True, adaptive_tol=1e-5,
+    )
+    st = eng.init_state(cfg, seed=0)
+    runner = jax.jit(
+        lambda s, b, p: eng.scan_protocol(
+            cfg, s, b, p, grads_fn, STEPS, lambda p, g, t: p - 0.02 * g
+        )
+    )
+    _, _, outs = runner(st, jnp.zeros((N,), jnp.float32),
+                        jnp.zeros(D, jnp.float32))
+    used = np.asarray(outs.clip_iters_used)
+    assert used.shape == (STEPS,)
+    assert used.max() <= 60
+    # warm-started steps after the first need only a handful of iterations
+    assert used[1:].mean() < 15, used

@@ -181,3 +181,65 @@ def test_protocol_fused_path_matches_two_call_path():
     t_fused, bans_fused = run(True)
     np.testing.assert_allclose(t_fused, t_ref, atol=1e-5)
     assert bans_fused == bans_ref
+
+
+# ---------------------------------------------------------------------------
+# Adaptive early-exit family
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(4, 12),
+    d=st.sampled_from([128, 256, 384]),
+    tau=st.floats(0.5, 30.0),
+    banned=st.integers(0, 2),
+)
+def test_property_adaptive_step_kernel_matches_ref(n, d, tau, banned):
+    """One driver iteration (interpret mode) == the expanded-recurrence
+    oracle, for random shapes/taus/ban masks and a non-trivial carried v
+    (d block-multiple — the while driver pads before invoking the step)."""
+    from repro.kernels import centered_clip as _k
+    from repro.kernels.ref import adaptive_step_ref
+
+    parts = jax.random.normal(jax.random.key(n * 31 + d), (3, n, d))
+    w = jnp.ones((n,)).at[:banned].set(0.0)
+    v = 0.3 * jax.random.normal(jax.random.key(d), (3, 1, d))
+    sq = jnp.sum((parts - v) ** 2, axis=-1, keepdims=True)
+    vn, sqn = _k.adaptive_clip_step_pallas(parts, v, sq, tau, w, block=128)
+    vr, sqr = jax.vmap(
+        lambda x, vv, ss: adaptive_step_ref(x, vv, ss, tau, w)
+    )(parts, v[:, 0], sq[:, :, 0])
+    np.testing.assert_allclose(np.asarray(vn[:, 0]), np.asarray(vr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sqn[:, :, 0]), np.asarray(sqr),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_adaptive_op_tol_zero_equals_fixed_kernel():
+    """tol=0 (cap binding) reproduces the FUSED fixed-budget kernel's
+    aggregate bitwise (both carry the incremental-norm recurrence; the
+    legacy two-phase kernel recomputes norms and differs at the ulp level),
+    and the fused adaptive op's epilogue tables equal the standalone batched
+    table kernel on the same iterate."""
+    from repro.kernels.ops import (
+        butterfly_clip_adaptive_op,
+        butterfly_clip_fused_adaptive_op,
+        butterfly_clip_fused_op,
+        verify_tables_all_op,
+    )
+
+    parts = jax.random.normal(jax.random.key(21), (4, 8, 384))
+    z = jax.random.normal(jax.random.key(22), (4, 384))
+    w = jnp.ones((8,)).at[5].set(0.0)
+    agg_fixed, _, _ = butterfly_clip_fused_op(parts, 1.0, z, w, n_iters=12)
+    agg_adapt, iters = butterfly_clip_adaptive_op(
+        parts, 1.0, 0.0, w, max_iters=12
+    )
+    np.testing.assert_array_equal(np.asarray(agg_adapt), np.asarray(agg_fixed))
+    assert np.all(np.asarray(iters) == 12)
+
+    agg2, s2, n2, _ = butterfly_clip_fused_adaptive_op(
+        parts, 1.0, z, 0.0, w, max_iters=12
+    )
+    s_ref, n_ref = verify_tables_all_op(parts, agg2, z, 1.0)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(n2), np.asarray(n_ref))

@@ -169,3 +169,42 @@ print("PALLAS_COMPILE_OK")
     )
     assert r.returncode == 0, r.stdout[-2000:] + "\n---\n" + r.stderr[-2000:]
     assert "PALLAS_COMPILE_OK" in r.stdout
+
+
+def test_adaptive_step_kernel_lowers_natively():
+    """The one-pass adaptive clip iteration (cw from carried sq, v update,
+    incremental next-sq) through the real Mosaic pipeline."""
+    parts = _stack(10, (PARTS, N, D))
+    v = _stack(11, (PARTS, 1, D)) * 0.1
+    sq = jnp.sum((parts - v) ** 2, axis=-1, keepdims=True)
+
+    def fn(p, vv, ss):
+        return _k.adaptive_clip_step_pallas(p, vv, ss, 1.0, interpret=False)
+
+    out = _validate(fn, parts, v, sq)
+    if out is not None:
+        ref = _k.adaptive_clip_step_pallas(parts, v, sq, 1.0, interpret=True)
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("warm", [False, True])
+def test_adaptive_driver_lowers_natively(warm):
+    """The full early-exit driver: lax.while_loop wrapped around the Mosaic
+    step kernel must lower as a unit (early-exit kernels cannot merge
+    interpreter-only — this is the CI gate for the adaptive family)."""
+    parts = _stack(12, (PARTS, N, D))
+    v0 = _stack(13, (PARTS, D)) * 0.1 if warm else None
+
+    def fn(p):
+        return _k.butterfly_clip_adaptive_pallas(
+            p, 1.0, 1e-4, ITERS, v0=v0, interpret=False
+        )
+
+    out = _validate(fn, parts)
+    if out is not None:
+        ref = _k.butterfly_clip_adaptive_pallas(
+            parts, 1.0, 1e-4, ITERS, v0=v0, interpret=True
+        )
+        np.testing.assert_allclose(out[0], np.asarray(ref[0]), atol=1e-4)
+        np.testing.assert_array_equal(out[1], np.asarray(ref[1]))
