@@ -1,32 +1,48 @@
-"""Paper Figure 3: attack x defense grid (controlled classification task,
-16 peers / 7 Byzantine). Reports final accuracy per cell — BTARD should
-recover for every attack; plain mean and the coordinate median should fail
-where the paper says they do.
+"""Paper Figure 3: attack x aggregator grid (controlled classification task,
+16 peers / 7 Byzantine). Reports final accuracy per cell — BTARD's
+ButterflyClip should recover for every attack; the robust baselines fail
+exactly where the paper (and He et al. / Lu et al.) say they do.
 
-BTARD cells run through the scanned ProtocolState engine (core.engine):
-every cell is ONE jitted lax.scan over all its steps. A loop-engine
-cross-check cell confirms the scan reproduces the host loop's bans."""
+Every cell runs through the scanned ProtocolState engine (core.engine) via
+the AggregatorSpec registry: ONE jitted lax.scan per cell, with the
+aggregator selected declaratively (``EngineConfig.aggregator``). The
+"btard" column is the verifiable ButterflyClip flagship (bans flow from the
+verification tables); every other column is a registered baseline spec
+running with verification degraded to a no-op — the attack lands, only the
+detection arm differs. A loop-engine cross-check cell confirms the scan
+reproduces the host loop's bans."""
+import argparse
+
 from benchmarks.common import emit, run_cell
 
-ATTACKS = ["none", "sign_flip", "random_direction", "label_flip", "ipm_06", "alie"]
-DEFENSES = ["btard", "mean", "coordinate_median", "centered_clip"]
+ATTACKS = ["none", "sign_flip", "random_direction", "label_flip", "ipm_06",
+           "alie"]
+# "btard" = the verifiable butterfly_clip spec; the rest are the registered
+# baseline aggregators (core.aggregators.registered_aggregators()).
+AGGREGATORS = ["btard", "mean", "coordinate_median", "trimmed_mean",
+               "geometric_median", "krum", "centered_clip"]
 
 
 def main(fast=True):
     attacks = ATTACKS if not fast else ["none", "sign_flip", "ipm_06", "alie"]
-    defenses = DEFENSES if not fast else ["btard", "mean", "centered_clip"]
+    aggregators = AGGREGATORS if not fast else [
+        "btard", "mean", "krum", "centered_clip", "trimmed_mean"
+    ]
+    steps = 25 if fast else 35
     for attack in attacks:
-        for defense in defenses:
-            acc, banned, us = run_cell(defense, attack, steps=35, scan=True)
+        for agg in aggregators:
+            acc, banned, us = run_cell(agg, attack, steps=steps, scan=True)
             emit(
-                f"fig3/{attack}/{defense}",
+                f"fig3/{attack}/{agg}",
                 us,
                 f"acc={acc:.3f};banned={banned}",
             )
     # engine cross-check: the scanned run and the legacy per-step loop are
     # the same state machine — bans and accuracy must agree
-    acc_l, ban_l, us_l = run_cell("btard", "sign_flip", steps=35, scan=False)
-    acc_s, ban_s, us_s = run_cell("btard", "sign_flip", steps=35, scan=True)
+    acc_l, ban_l, us_l = run_cell("btard", "sign_flip", steps=steps,
+                                  scan=False)
+    acc_s, ban_s, us_s = run_cell("btard", "sign_flip", steps=steps,
+                                  scan=True)
     emit(
         "fig3/engine_check/sign_flip",
         us_l,
@@ -37,4 +53,8 @@ def main(fast=True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subset of attacks x aggregators, shorter runs")
+    args = ap.parse_args()
+    main(fast=args.quick)

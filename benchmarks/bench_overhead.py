@@ -99,12 +99,13 @@ def scan_engine_bench(steps=None, fast=True, out_dir=None):
     # and the ratio is noise-bound)
     loss_fn, params0, batch_fn, accuracy = classification_setup(dim=512)
 
-    def make(clip_iters, warm_start=False, adaptive_tol=None):
+    def make(clip_iters, warm_start=False, adaptive_tol=None,
+             defense="btard"):
         cfg = TrainerConfig(
             n_peers=16,
             byzantine=tuple(range(9, 16)),
             attack=AttackConfig(kind="sign_flip", start_step=5),
-            defense="btard",
+            defense=defense,
             tau=1.0,
             clip_iters=clip_iters,
             m_validators=2,
@@ -173,6 +174,41 @@ def scan_engine_bench(steps=None, fast=True, out_dir=None):
         tr_adapt.run_scan(steps)
         best_adapt = min(best_adapt, time.perf_counter() - t0)
     adaptive_vs_scan = best_fixed / max(best_adapt, 1e-9)
+
+    # --- the AggregatorSpec comparison axis: every registered aggregator
+    # through the SAME scanned engine on the same attacked workload. The
+    # block existing at all proves each spec is jit/scan-clean; the
+    # flagship's advantage over the fixed scan stays gated separately
+    # (adaptive_speedup_vs_scan_x >= 1.15 in check_regression.py).
+    from repro.core.aggregators import REGISTRY, registered_aggregators
+
+    agg_steps = max(steps // 2, 20)
+    aggregator_comparison = {}
+    for name in registered_aggregators():
+        defense = "btard" if name == "butterfly_clip" else name
+        tr = make(60, warm_start=name == "butterfly_clip",
+                  adaptive_tol=1e-4 if name == "butterfly_clip" else None,
+                  defense=defense)
+        tr.run_scan(agg_steps)  # warmup: trace + compile
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            tr.run_scan(agg_steps)
+            best = min(best, time.perf_counter() - t0)
+        aggregator_comparison[name] = {
+            "steps_per_s": agg_steps / best,
+            "acc": accuracy(tr.unraveled_params()),
+            "banned": len(tr.banned),
+            "verifiable": REGISTRY[name].verifiable,
+        }
+        emit(
+            f"overhead/aggregator/{name}",
+            1e6 * best / agg_steps,
+            f"sps={agg_steps / best:.1f};"
+            f"acc={aggregator_comparison[name]['acc']:.3f};"
+            f"banned={aggregator_comparison[name]['banned']}",
+        )
+
     fixed_curve = [scan, warm] + [time_run("run_scan", 30)]
     adaptive_curve = [
         time_run("run_scan", 60, warm_start=True, adaptive_tol=tol)
@@ -187,6 +223,7 @@ def scan_engine_bench(steps=None, fast=True, out_dir=None):
         "scan_engine": scan,
         "scan_engine_warm15": warm,
         "scan_engine_adaptive": adaptive,
+        "aggregator_comparison": aggregator_comparison,
         "fixed_curve": fixed_curve,
         "adaptive_curve": adaptive_curve,
         "scan_speedup_x": scan["steps_per_s"] / max(loop["steps_per_s"], 1e-9),

@@ -38,6 +38,12 @@ ACC_SLACK = 0.02
 CELLS = ("legacy_loop", "scan_engine", "scan_engine_warm15",
          "scan_engine_adaptive")
 
+# every registered AggregatorSpec must appear in the BENCH_scan.json
+# aggregator_comparison block (keep in sync with
+# repro.core.aggregators.registered_aggregators())
+AGG_NAMES = ("butterfly_clip", "centered_clip", "coordinate_median",
+             "geometric_median", "krum", "mean", "trimmed_mean")
+
 
 def _load(path):
     with open(path) as f:
@@ -113,6 +119,53 @@ def check_scan(fresh, base, tol, errors):
         errors.append(
             f"adaptive clip no longer early-exits (mean {used:.1f} of cap {cap})"
         )
+
+    # aggregator-comparison block (the AggregatorSpec axis): every
+    # registered spec must be present and jit/scan-clean — a cell only
+    # exists if its scanned run compiled and executed. Non-verifiable
+    # specs must never ban (their verification degrades to a no-op); the
+    # flagship ButterflyClip must keep the baseline's ban count and
+    # accuracy. Its >= MIN_ADAPTIVE_X advantage over the fixed scan is
+    # already gated above via adaptive_speedup_vs_scan_x.
+    base_block = base.get("aggregator_comparison")
+    if base_block is None:
+        errors.append(
+            "committed BENCH_scan.json missing aggregator_comparison block "
+            "(regenerate the baseline)"
+        )
+    block = fresh.get("aggregator_comparison")
+    if block is None:
+        errors.append("fresh BENCH_scan.json missing aggregator_comparison "
+                      "block (bench did not run the aggregator axis?)")
+        return
+    for name in AGG_NAMES:
+        cell = block.get(name)
+        if cell is None:
+            errors.append(f"aggregator_comparison missing cell: {name}")
+            continue
+        if not cell.get("steps_per_s", 0) > 0:
+            errors.append(
+                f"aggregator_comparison[{name}] not jit-clean "
+                f"(steps_per_s={cell.get('steps_per_s')})"
+            )
+        if not cell.get("verifiable") and cell.get("banned", 0) != 0:
+            errors.append(
+                f"aggregator_comparison[{name}]: non-verifiable spec banned "
+                f"{cell['banned']} peers (verification must be a no-op)"
+            )
+        bcell = (base_block or {}).get(name)
+        if name == "butterfly_clip" and bcell is not None:
+            if cell.get("banned") != bcell.get("banned"):
+                errors.append(
+                    "aggregator_comparison[butterfly_clip]: ban count "
+                    f"changed {bcell.get('banned')} -> {cell.get('banned')}"
+                )
+            if cell.get("acc", 0.0) < bcell.get("acc", 0.0) - ACC_SLACK:
+                errors.append(
+                    "aggregator_comparison[butterfly_clip]: accuracy "
+                    f"regressed {bcell.get('acc'):.3f} -> "
+                    f"{cell.get('acc'):.3f}"
+                )
 
 
 def main():

@@ -63,9 +63,12 @@ def classification_setup(dim=DIM, classes=CLASSES):
 
 def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2,
              seed=0, scan=False, clip_iters=60, warm_start=False):
-    """One attack x defense cell. scan=True routes the BTARD defense through
-    the jitted lax.scan engine (core.engine) — same protocol, one compiled
-    program for all ``steps`` rounds instead of a host loop."""
+    """One attack x defense cell. scan=True routes the defense through the
+    jitted lax.scan engine (core.engine) — same protocol, one compiled
+    program for all ``steps`` rounds instead of a host loop. Any registered
+    AggregatorSpec name works as ``defense`` ("btard" = the verifiable
+    ButterflyClip flagship; baselines run with verification degraded)."""
+    from repro.core.aggregators import REGISTRY
     loss_fn, params0, batch_fn, accuracy = classification_setup()
     byz = tuple(range(n_peers - n_byz, n_peers))
     cfg = TrainerConfig(
@@ -82,7 +85,7 @@ def run_cell(defense, attack, n_peers=16, n_byz=7, steps=40, tau=1.0, m=2,
     tr = BTARDTrainer(
         loss_fn, params0, batch_fn, cfg, optimizer=sgd(0.3, momentum=0.9)
     )
-    use_scan = scan and defense == "btard"
+    use_scan = scan and (defense == "btard" or defense in REGISTRY)
     if use_scan:
         # warm the compile cache on the (pure) runner so the timed section
         # measures steps, not the one-off trace of an N-step lax.scan

@@ -1,4 +1,12 @@
 """BTARD — the paper's primary contribution as a composable JAX module."""
+from repro.core.aggregators import (  # noqa: F401
+    AggInfo,
+    AggregatorSpec,
+    aggregate,
+    registered_aggregators,
+    resolve_spec,
+    verified_aggregate,
+)
 from repro.core.centered_clip import (  # noqa: F401
     centered_clip,
     centered_clip_to_tol,

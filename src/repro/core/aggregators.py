@@ -1,19 +1,65 @@
-"""Baseline robust aggregators the paper compares against (§4.1):
+"""Robust aggregation as a pluggable, declarative API.
 
-plain mean (All-Reduce), coordinate-wise median, geometric median
-(Weiszfeld run to eps), trimmed mean, Krum, and parameter-server
-CenteredClip. All take (n, d) stacked peer vectors -> (d,).
+Two layers live here:
+
+1. The **baseline aggregator zoo** the paper compares against (§4.1):
+   plain mean (All-Reduce), coordinate-wise median, geometric median
+   (Weiszfeld run to eps), trimmed mean, Krum, and trusted-parameter-server
+   CenteredClip. All take (n, d) stacked peer vectors -> (d,).
+
+2. The **AggregatorSpec registry** — one declarative contract from the
+   kernels to the CLI. A spec is ``name + static params + capability
+   flags``; the registry resolves it to a jit/scan-safe callable of the
+   uniform signature
+
+       agg_fn(xs (n, d), weights (n,), v0 (d,) | None, key)
+           -> (agg (d,), AggInfo)
+
+   so the protocol engine (``core.engine``), the distributed launch stage
+   (``launch.steps.aggregation_stage``), the trainer, the benchmarks and
+   the ``--aggregator`` CLI flag all select an aggregator the same way —
+   mirroring the ``lax.switch`` attack registry from ``core.attacks``.
+   Unlike attacks, the spec is *static* configuration (one jit cache entry
+   per spec, like ``EngineConfig``), so dispatch is resolved at trace time
+   rather than via ``lax.switch``; every registered fn is pure and
+   statically shaped, which is what makes the choice scan-safe.
+
+   Capability flags drive how the rest of the stack degrades:
+
+   * ``verifiable``  — supports the Alg. 6 broadcast tables, so the
+     engine's verification/accusation/ban phases run (only ButterflyClip);
+     non-verifiable specs degrade those phases to no-ops.
+   * ``weighted``    — honours the (n,) ban mask (all registered specs).
+   * ``warm_startable`` — accepts ``v0`` (the previous aggregate).
+   * ``adaptive``    — iteration count is data-dependent (reported via
+     ``AggInfo.iters``).
+   * ``coordinatewise`` — decomposes over coordinates, so the distributed
+     stage may apply it per model shard; norm/distance-based fns (Krum,
+     geometric median, CenteredClip) need the FULL vector and the launch
+     stage joins the model shards first (``launch.steps``).
 """
 from __future__ import annotations
 
-import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.centered_clip import centered_clip, centered_clip_to_tol
+from repro.core.centered_clip import centered_clip_to_tol
+
+_BIG = 1e30  # "infinite" pairwise distance for masked rows
 
 
+class AggInfo(NamedTuple):
+    """Uniform per-call aggregator observables (scan-stackable)."""
+
+    iters: jnp.ndarray  # () i32 — iterations the aggregator actually ran
+
+
+# ---------------------------------------------------------------------------
+# Baseline aggregators (paper §4.1)
+# ---------------------------------------------------------------------------
 def mean_agg(xs, weights=None):
     if weights is None:
         return xs.mean(0)
@@ -31,15 +77,33 @@ def coordinate_median(xs, weights=None):
 
 
 def trimmed_mean(xs, trim_ratio=0.2, weights=None):
+    """Coordinate-wise trimmed mean over the ACTIVE rows only.
+
+    Banned rows (weight 0) are keyed to +inf before the sort, so they land
+    past the active block and never enter the trim window — previously a
+    banned Byzantine row could survive into the mean because the window was
+    computed over all n rows. The trim count ``k = floor(m * trim_ratio)``
+    follows the dynamic active count m, keeping the fn jit/scan-safe.
+    """
     n = xs.shape[0]
-    k = int(n * trim_ratio)
-    s = jnp.sort(xs, axis=0)
-    if k:
-        s = s[k : n - k]
-    return s.mean(0)
+    if weights is None:
+        k = int(n * trim_ratio)
+        s = jnp.sort(xs, axis=0)
+        if k:
+            s = s[k : n - k]
+        return s.mean(0)
+    active = weights > 0
+    m = active.sum()
+    k = jnp.floor(m * trim_ratio).astype(jnp.int32)
+    s = jnp.sort(jnp.where(active[:, None], xs, jnp.inf), axis=0)
+    idx = jnp.arange(n)[:, None]
+    keep = (idx >= k) & (idx < m - k)  # only positions < m are active rows
+    cnt = jnp.maximum(m - 2 * k, 1)
+    return jnp.where(keep, s, 0.0).sum(0) / cnt
 
 
-def geometric_median(xs, eps=1e-6, max_iters=200, weights=None):
+def geometric_median(xs, eps=1e-6, max_iters=200, weights=None,
+                     return_iters=False):
     """Weiszfeld iterations to convergence."""
     n, d = xs.shape
     w0 = jnp.ones((n,)) if weights is None else weights
@@ -56,16 +120,28 @@ def geometric_median(xs, eps=1e-6, max_iters=200, weights=None):
         v_new = (inv[:, None] * xs).sum(0) / jnp.maximum(inv.sum(), 1e-30)
         return v_new, jnp.linalg.norm(v_new - v), it + 1
 
-    v, _, _ = jax.lax.while_loop(cond, body, (v, jnp.float32(jnp.inf), 0))
+    v, _, iters = jax.lax.while_loop(cond, body, (v, jnp.float32(jnp.inf), 0))
+    if return_iters:
+        return v, iters
     return v
 
 
 def krum(xs, n_byzantine: int, weights=None):
     """Krum (Blanchard et al. 2017): pick the vector with the smallest sum of
-    distances to its n - b - 2 nearest neighbours."""
+    distances to its n - b - 2 nearest neighbours.
+
+    Banned rows (weight 0) are masked out of the PAIRWISE distance matrix,
+    not just the final scores — previously a banned colluder still served
+    as a cheap nearest neighbour for its active accomplices, deflating
+    their scores. Masked pairs sit at an "infinite" distance, which every
+    active row pays equally when fewer than k active neighbours remain.
+    """
     n = xs.shape[0]
     d2 = jnp.sum((xs[:, None, :] - xs[None, :, :]) ** 2, axis=-1)  # (n, n)
-    d2 = d2 + jnp.eye(n) * 1e30
+    d2 = d2 + jnp.eye(n) * _BIG
+    if weights is not None:
+        banned = weights <= 0
+        d2 = jnp.where(banned[None, :] | banned[:, None], _BIG, d2)
     k = max(1, n - n_byzantine - 2)
     nearest = jnp.sort(d2, axis=1)[:, :k]
     scores = nearest.sum(1)
@@ -74,12 +150,18 @@ def krum(xs, n_byzantine: int, weights=None):
     return xs[jnp.argmin(scores)]
 
 
-def ps_centered_clip(xs, tau, eps=1e-6, weights=None):
+def ps_centered_clip(xs, tau, eps=1e-6, max_iters=200, weights=None, v0=None,
+                     return_iters=False):
     """The original (trusted-parameter-server) CenteredClip baseline."""
-    v, _ = centered_clip_to_tol(xs, tau, eps=eps, weights=weights)
+    v, iters = centered_clip_to_tol(
+        xs, tau, eps=eps, max_iters=max_iters, weights=weights, v0=v0
+    )
+    if return_iters:
+        return v, iters
     return v
 
 
+# Legacy name -> fn map (host call sites that predate the spec registry).
 AGGREGATORS = {
     "mean": mean_agg,
     "coordinate_median": coordinate_median,
@@ -88,3 +170,364 @@ AGGREGATORS = {
     "krum": krum,
     "centered_clip": ps_centered_clip,
 }
+
+
+# ---------------------------------------------------------------------------
+# The AggregatorSpec registry
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AggregatorDef:
+    """One registered aggregator: maker + declared static params + flags.
+
+    ``make(n, d, use_pallas, **params) -> agg_fn`` with the uniform
+    signature documented at module top. ``defaults`` declares the accepted
+    static param names with their default values — ``with_defaults`` and
+    the CLI only ever fill/override declared params.
+    """
+
+    name: str
+    make: Callable[..., Callable]
+    defaults: tuple = ()  # ((name, default), ...)
+    verifiable: bool = False
+    weighted: bool = True
+    warm_startable: bool = False
+    adaptive: bool = False
+    coordinatewise: bool = False
+
+    @property
+    def param_names(self):
+        return tuple(k for k, _ in self.defaults)
+
+
+REGISTRY: dict[str, AggregatorDef] = {}
+
+
+def register(defn: AggregatorDef):
+    REGISTRY[defn.name] = defn
+    return defn
+
+
+def registered_aggregators():
+    """Registered spec names, flagship (verifiable) first."""
+    return tuple(sorted(REGISTRY, key=lambda k: (not REGISTRY[k].verifiable, k)))
+
+
+def _coerce(text: str):
+    """Parse a CLI param value: bool | int | float | 'none' | str."""
+    low = text.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    if low in ("none", "null"):
+        return None
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            continue
+    return text
+
+
+@dataclass(frozen=True)
+class AggregatorSpec:
+    """Declarative aggregator choice: registry name + static params.
+
+    Hashable (params are a sorted tuple of (name, value) pairs), so a spec
+    can sit inside ``EngineConfig`` / jit static args — one compiled
+    program per distinct spec, exactly like the rest of the config.
+    """
+
+    name: str = "butterfly_clip"
+    params: tuple = ()  # ((name, value), ...)
+
+    # -- registry resolution ------------------------------------------------
+    @property
+    def definition(self) -> AggregatorDef:
+        try:
+            return REGISTRY[self.name]
+        except KeyError:
+            raise ValueError(
+                f"unknown aggregator {self.name!r}; registered: "
+                f"{', '.join(registered_aggregators())}"
+            ) from None
+
+    @property
+    def verifiable(self) -> bool:
+        return self.definition.verifiable
+
+    @property
+    def weighted(self) -> bool:
+        return self.definition.weighted
+
+    @property
+    def warm_startable(self) -> bool:
+        return self.definition.warm_startable
+
+    @property
+    def adaptive(self) -> bool:
+        return self.definition.adaptive
+
+    @property
+    def coordinatewise(self) -> bool:
+        return self.definition.coordinatewise
+
+    # -- params -------------------------------------------------------------
+    def param_dict(self) -> dict:
+        """Declared defaults overlaid with this spec's explicit params."""
+        d = dict(self.definition.defaults)
+        for k, v in self.params:
+            if k not in d:
+                raise ValueError(
+                    f"aggregator {self.name!r} takes no param {k!r} "
+                    f"(declared: {self.definition.param_names})"
+                )
+            d[k] = v
+        return d
+
+    def get(self, key: str, default=None):
+        return self.param_dict().get(key, default)
+
+    def _replace_params(self, updates: dict) -> "AggregatorSpec":
+        merged = dict(self.params)
+        merged.update(updates)
+        return AggregatorSpec(self.name, tuple(sorted(merged.items())))
+
+    def with_defaults(self, **kw) -> "AggregatorSpec":
+        """Fill declared params NOT already set on this spec (engine-level
+        knobs like tau/n_iters act as defaults; explicit spec params win).
+        Undeclared keys are silently ignored — e.g. ``tau`` for ``mean``."""
+        have = dict(self.params)
+        accepted = set(self.definition.param_names)
+        fill = {
+            k: v for k, v in kw.items()
+            if k in accepted and k not in have
+        }
+        return self._replace_params(fill) if fill else self
+
+    def override(self, **kw) -> "AggregatorSpec":
+        """Set declared params, overriding existing values (CLI shims)."""
+        accepted = set(self.definition.param_names)
+        bad = [k for k in kw if k not in accepted]
+        if bad:
+            raise ValueError(
+                f"aggregator {self.name!r} takes no param(s) {bad} "
+                f"(declared: {self.definition.param_names})"
+            )
+        return self._replace_params(kw)
+
+    # -- construction / display ---------------------------------------------
+    @classmethod
+    def parse(cls, text: str) -> "AggregatorSpec":
+        """Parse ``NAME[:k=v,...]`` (the ``--aggregator`` CLI syntax)."""
+        name, _, tail = text.partition(":")
+        name = name.strip()
+        spec = cls(name)
+        spec.definition  # eager name validation
+        params = {}
+        if tail.strip():
+            for item in tail.split(","):
+                k, sep, v = item.partition("=")
+                if not sep:
+                    raise ValueError(
+                        f"bad aggregator param {item!r} in {text!r} "
+                        "(expected k=v)"
+                    )
+                params[k.strip()] = _coerce(v.strip())
+        return spec.override(**params) if params else spec
+
+    def canonical(self) -> str:
+        if not self.params:
+            return self.name
+        tail = ",".join(f"{k}={v}" for k, v in self.params)
+        return f"{self.name}:{tail}"
+
+    def build(self, n: int, d: int, use_pallas: bool = False) -> Callable:
+        """Resolve to the uniform callable
+        ``agg_fn(xs, weights, v0, key) -> (agg, AggInfo)``."""
+        return self.definition.make(n, d, use_pallas, **self.param_dict())
+
+
+def resolve_spec(spec) -> AggregatorSpec:
+    """Accept an AggregatorSpec, a ``NAME[:k=v,...]`` string, or None
+    (-> the flagship ButterflyClip spec)."""
+    if spec is None:
+        return AggregatorSpec("butterfly_clip")
+    if isinstance(spec, AggregatorSpec):
+        spec.definition  # validate
+        return spec
+    if isinstance(spec, str):
+        return AggregatorSpec.parse(spec)
+    raise TypeError(f"not an aggregator spec: {spec!r}")
+
+
+def with_byzantine_default(spec: AggregatorSpec,
+                           n_byzantine: int) -> AggregatorSpec:
+    """Fill Krum's ``n_byzantine`` from the caller's known Byzantine count
+    when the spec left it unset — the ONE place this defaulting lives
+    (trainer, CLI). A spec reaching the maker with it still unset falls
+    back to the max tolerable ``(n - 3) // 2``, the assumption-free bound
+    for callers with no attacker count at all."""
+    if spec.name == "krum" and spec.get("n_byzantine") is None:
+        return spec.override(n_byzantine=int(n_byzantine))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Registered makers (uniform signature; static params partialed in here)
+# ---------------------------------------------------------------------------
+def _info(iters) -> AggInfo:
+    return AggInfo(iters=jnp.asarray(iters, jnp.int32))
+
+
+def _make_mean(n, d, use_pallas):
+    def fn(xs, weights=None, v0=None, key=None):
+        return mean_agg(xs, weights), _info(1)
+
+    return fn
+
+
+def _make_coordinate_median(n, d, use_pallas):
+    def fn(xs, weights=None, v0=None, key=None):
+        return coordinate_median(xs, weights), _info(1)
+
+    return fn
+
+
+def _make_trimmed_mean(n, d, use_pallas, trim_ratio=0.2):
+    def fn(xs, weights=None, v0=None, key=None):
+        return trimmed_mean(xs, trim_ratio=trim_ratio, weights=weights), _info(1)
+
+    return fn
+
+
+def _make_geometric_median(n, d, use_pallas, eps=1e-6, max_iters=200):
+    def fn(xs, weights=None, v0=None, key=None):
+        v, iters = geometric_median(
+            xs, eps=eps, max_iters=max_iters, weights=weights,
+            return_iters=True,
+        )
+        return v, _info(iters)
+
+    return fn
+
+
+def _make_krum(n, d, use_pallas, n_byzantine=None):
+    if n_byzantine is None:
+        # Krum's guarantee needs n >= 2b + 3; default to the max tolerable b
+        n_byzantine = max(0, (n - 3) // 2)
+    k_static = int(n_byzantine)
+
+    def fn(xs, weights=None, v0=None, key=None):
+        return krum(xs, n_byzantine=k_static, weights=weights), _info(1)
+
+    return fn
+
+
+def _make_ps_centered_clip(n, d, use_pallas, tau=1.0, eps=1e-6,
+                           max_iters=200, warm_start=False):
+    def fn(xs, weights=None, v0=None, key=None):
+        v, iters = ps_centered_clip(
+            xs, tau, eps=eps, max_iters=max_iters, weights=weights,
+            v0=v0 if warm_start else None, return_iters=True,
+        )
+        return v, _info(iters)
+
+    return fn
+
+
+def _make_butterfly(n, d, use_pallas, tau=1.0, n_iters=60,
+                    adaptive_tol=None, warm_start=False):
+    """Flagship ButterflyClip as a FLAT aggregator (no tables): partition,
+    per-partition CenteredClip (fused/adaptive Pallas kernels when
+    ``use_pallas``), merge. The verifiable path with the Alg. 6 tables is
+    :func:`verified_aggregate` — same spec, same params."""
+    from repro.core import butterfly as bf
+
+    def fn(xs, weights=None, v0=None, key=None):
+        v0p = None
+        if warm_start and v0 is not None:
+            v0p = bf.split_parts(v0[None, :], n)[0]
+        agg, _parts, _s, _norms, iters = bf.clip_aggregate(
+            xs, tau, n_iters, adaptive_tol=adaptive_tol, weights=weights,
+            use_pallas=use_pallas, v0=v0p,
+        )
+        return bf.merge_parts(agg, d), _info(iters)
+
+    return fn
+
+
+register(AggregatorDef(
+    "mean", _make_mean,
+    coordinatewise=True,
+))
+register(AggregatorDef(
+    "coordinate_median", _make_coordinate_median,
+    coordinatewise=True,
+))
+register(AggregatorDef(
+    "trimmed_mean", _make_trimmed_mean,
+    defaults=(("trim_ratio", 0.2),),
+    coordinatewise=True,
+))
+register(AggregatorDef(
+    "geometric_median", _make_geometric_median,
+    defaults=(("eps", 1e-6), ("max_iters", 200)),
+    adaptive=True,
+))
+register(AggregatorDef(
+    "krum", _make_krum,
+    defaults=(("n_byzantine", None),),
+))
+register(AggregatorDef(
+    "centered_clip", _make_ps_centered_clip,
+    defaults=(("tau", 1.0), ("eps", 1e-6), ("max_iters", 200),
+              ("warm_start", False)),
+    warm_startable=True,
+    adaptive=True,
+))
+register(AggregatorDef(
+    "butterfly_clip", _make_butterfly,
+    defaults=(("tau", 1.0), ("n_iters", 60), ("adaptive_tol", None),
+              ("warm_start", False)),
+    verifiable=True,
+    warm_startable=True,
+    adaptive=True,
+))
+
+
+# ---------------------------------------------------------------------------
+# Spec-level entry points
+# ---------------------------------------------------------------------------
+def aggregate(spec, xs, weights=None, v0=None, key=None, use_pallas=False):
+    """Run any registered aggregator by spec: (n, d) -> ((d,), AggInfo)."""
+    spec = resolve_spec(spec)
+    n, d = xs.shape
+    return spec.build(n, d, use_pallas=use_pallas)(xs, weights, v0, key)
+
+
+def verified_aggregate(spec, grads, z, weights=None, v0=None,
+                       use_pallas=False):
+    """The VERIFIABLE aggregation contract: aggregation plus the Alg. 6
+    broadcast tables, in the butterfly partition layout.
+
+    grads: (n, d); z: (n_parts, part) unit directions (MPRNG seed);
+    v0: optional (n_parts, part) warm start (previous aggregate).
+    Returns (agg (n_parts, part), parts (n, n_parts, part), s (n, n_parts),
+    norms (n, n_parts), iters () i32). Raises for non-verifiable specs —
+    callers degrade verification to a no-op instead (core.engine).
+    """
+    from repro.core import butterfly as bf
+
+    spec = resolve_spec(spec)
+    if not spec.verifiable:
+        raise ValueError(
+            f"aggregator {spec.name!r} is not verifiable — it produces no "
+            "broadcast tables; run it through aggregate() and skip the "
+            "verification phases"
+        )
+    p = spec.param_dict()
+    if not p.get("warm_start"):
+        v0 = None
+    return bf.clip_aggregate(
+        grads, p["tau"], p["n_iters"], z=z, adaptive_tol=p["adaptive_tol"],
+        weights=weights, use_pallas=use_pallas, v0=v0,
+    )

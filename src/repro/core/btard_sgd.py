@@ -15,7 +15,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import AGGREGATORS
+from repro.core.aggregators import (
+    AGGREGATORS,
+    REGISTRY,
+    AggregatorSpec,
+    with_byzantine_default,
+)
 from repro.core import attacks as attacks_mod
 from repro.core import engine as eng
 from repro.core.protocol import AttackConfig, BTARDProtocol
@@ -41,6 +46,12 @@ class TrainerConfig:
     # then the static cap); None = fixed budget. Composes with warm_start —
     # together they convert the ~2x iters-to-tol saving into wall clock.
     adaptive_tol: float | None = None
+    # explicit AggregatorSpec (or "name[:k=v,...]") for the engine paths
+    # (protocol / run_scan). None resolves from `defense`: "btard" -> the
+    # flagship ButterflyClip; any other registered name -> that spec, with
+    # krum's n_byzantine defaulting to len(byzantine). Non-verifiable specs
+    # run without the accusation/ban machinery (core.aggregators).
+    aggregator: object = None
 
 
 class BTARDTrainer:
@@ -60,6 +71,12 @@ class BTARDTrainer:
                 jax.grad(lambda p: loss_fn(p, batch))(self._unravel(flat))
             )[0]
         )
+        agg = cfg.aggregator
+        if agg is None and cfg.defense != "btard" and cfg.defense in REGISTRY:
+            agg = with_byzantine_default(
+                AggregatorSpec(cfg.defense), len(cfg.byzantine)
+            )
+        self._engine_aggregator = agg
         self.protocol = BTARDProtocol(
             n_peers=cfg.n_peers,
             d=self.d,
@@ -75,6 +92,7 @@ class BTARDTrainer:
             use_pallas=cfg.use_pallas,
             warm_start=cfg.warm_start,
             adaptive_tol=cfg.adaptive_tol,
+            aggregator=agg,
         )
         self.history: list = []
         self._step = 0
@@ -214,9 +232,16 @@ class BTARDTrainer:
         """Run ``n_steps`` full BTARD rounds under one jitted ``lax.scan`` —
         zero host sync between steps (the legacy loop pays per-phase device
         round-trips). Bit-matches run() up to XLA fusion-order f32 noise;
-        bans/accusations are mirrored back into the host bookkeeping."""
-        if self.cfg.defense != "btard":
-            raise ValueError("run_scan requires the btard defense")
+        bans/accusations are mirrored back into the host bookkeeping.
+
+        Any registered aggregator runs here — "btard" maps to the flagship
+        ButterflyClip spec; baseline defenses (mean, krum, ...) run through
+        the same scanned engine with verification degraded to a no-op."""
+        if self.cfg.defense != "btard" and self._engine_aggregator is None:
+            raise ValueError(
+                f"run_scan: defense {self.cfg.defense!r} is not a registered "
+                "aggregator (see repro.core.aggregators.registered_aggregators)"
+            )
         proto = self.protocol
         runner = self._get_scan_runner(n_steps)
         (state, flat, opt_state), outs = runner(

@@ -133,10 +133,11 @@ def butterfly_clip_verified_adaptive(
     return agg, parts, s, norms, iters
 
 
-def butterfly_clip_verified(
+def _clip_verified_fixed(
     grads, tau, z, n_iters: int = 50, weights=None, use_pallas=False, v0=None
 ):
-    """ButterflyClip aggregation AND the Alg. 6 broadcast tables together.
+    """Fixed-budget ButterflyClip aggregation AND the Alg. 6 broadcast
+    tables together (the :func:`clip_aggregate` fixed/verified branch).
 
     grads: (n, d); z: (n_parts, part) unit directions (from the MPRNG seed).
     Returns (agg_parts (n_parts, part), parts (n, n_parts, part),
@@ -164,6 +165,71 @@ def butterfly_clip_verified(
         stacked, tau, n_iters=n_iters, weights=weights, v0=v0
     )
     s, norms = verification_tables(parts, agg, z, tau)
+    return agg, parts, s, norms
+
+
+def clip_aggregate(
+    grads, tau, n_iters: int, *, z=None, adaptive_tol=None, weights=None,
+    use_pallas=False, v0=None,
+):
+    """Unified ButterflyClip driver — the single entry the AggregatorSpec
+    registry resolves to (``core.aggregators``): fixed (``adaptive_tol is
+    None``) or adaptive early-exit budget, with (``z`` given) or without the
+    Alg. 6 verification tables.
+
+    Returns (agg (n_parts, part), parts (n, n_parts, part), s, norms,
+    iters () i32); s/norms are None when z is None; iters is the max
+    CenteredClip budget any partition ran (== n_iters on the fixed path).
+    """
+    if z is None:
+        if adaptive_tol is not None:
+            agg, parts, it = butterfly_clip_adaptive(
+                grads, tau, adaptive_tol, n_iters, weights=weights,
+                use_pallas=use_pallas, v0=v0,
+            )
+            return agg, parts, None, None, it.max().astype(jnp.int32)
+        agg, parts = butterfly_clip(
+            grads, tau=tau, n_iters=n_iters, weights=weights,
+            use_pallas=use_pallas, v0=v0,
+        )
+        return agg, parts, None, None, jnp.asarray(n_iters, jnp.int32)
+    if adaptive_tol is not None:
+        agg, parts, s, norms, it = butterfly_clip_verified_adaptive(
+            grads, tau, z, adaptive_tol, n_iters, weights=weights,
+            use_pallas=use_pallas, v0=v0,
+        )
+        return agg, parts, s, norms, it.max().astype(jnp.int32)
+    agg, parts, s, norms = _clip_verified_fixed(
+        grads, tau, z, n_iters=n_iters, weights=weights,
+        use_pallas=use_pallas, v0=v0,
+    )
+    return agg, parts, s, norms, jnp.asarray(n_iters, jnp.int32)
+
+
+def butterfly_clip_verified(
+    grads, tau, z, n_iters: int = 50, weights=None, use_pallas=False, v0=None
+):
+    """DEPRECATED shim — resolve an :class:`~repro.core.aggregators.
+    AggregatorSpec` instead (``verified_aggregate``); kept so pre-spec call
+    sites keep working. Same contract as :func:`_clip_verified_fixed`."""
+    import warnings
+
+    warnings.warn(
+        "butterfly_clip_verified is deprecated; select the aggregation via "
+        "an AggregatorSpec (repro.core.aggregators.verified_aggregate / "
+        "EngineConfig.aggregator) instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.core.aggregators import AggregatorSpec, verified_aggregate
+
+    spec = AggregatorSpec(
+        "butterfly_clip",
+        (("adaptive_tol", None), ("n_iters", int(n_iters)),
+         ("tau", float(tau)), ("warm_start", v0 is not None)),
+    )
+    agg, parts, s, norms, _iters = verified_aggregate(
+        spec, grads, z, weights=weights, v0=v0, use_pallas=use_pallas
+    )
     return agg, parts, s, norms
 
 

@@ -7,7 +7,14 @@ sizes. This module is the same state machine as pure functions over an
 explicit :class:`ProtocolState` pytree, so one full step jit-compiles and N
 steps run under ``lax.scan`` with zero host synchronisation:
 
-    compute_grads -> apply_attack -> butterfly_clip -> verify -> accuse/ban
+    compute_grads -> apply_attack -> aggregate (AggregatorSpec) -> verify
+    -> accuse/ban
+
+The aggregation phase is spec-dispatched (``EngineConfig.aggregator``,
+``core.aggregators``): the verifiable ButterflyClip flagship runs the full
+verification pipeline; non-verifiable baseline specs (mean, median, Krum,
+...) run the same step with verify/accuse/ban degraded to no-ops — the
+paper's Fig. 3 comparison axis inside one engine.
 
 Equivalences to the wire protocol (all recorded in kernels/DESIGN.md):
 
@@ -37,6 +44,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregators as agg_mod
 from repro.core import attacks as attacks_mod
 from repro.core import butterfly as bf
 
@@ -125,6 +133,25 @@ class EngineConfig:
     # clip_iters as the static cap. None = fixed budget. tol=0.0 reproduces
     # the fixed-budget aggregates bitwise (shared update rule).
     adaptive_tol: float | None = None
+    # which robust aggregator runs the aggregation phase: an AggregatorSpec,
+    # a "name[:k=v,...]" string, or None for the flagship ButterflyClip.
+    # The legacy knobs above (tau/clip_iters/warm_start/adaptive_tol) act as
+    # DEFAULTS for the spec's declared params; explicit spec params win.
+    # Non-verifiable specs (mean, krum, ...) degrade the verification /
+    # accusation / ban phases to no-ops — see core.aggregators.
+    aggregator: "agg_mod.AggregatorSpec | str | None" = None
+
+    def agg_spec(self) -> "agg_mod.AggregatorSpec":
+        """The resolved aggregator spec (legacy knobs filled as defaults).
+        ``clip_iters`` is the uniform iteration-budget knob: it fills
+        ``n_iters`` (fixed-budget specs) AND ``max_iters`` (to-tolerance
+        specs) — set e.g. ``centered_clip:max_iters=200`` explicitly to
+        restore the paper's run-to-convergence baseline."""
+        return agg_mod.resolve_spec(self.aggregator).with_defaults(
+            tau=self.tau, n_iters=self.clip_iters,
+            max_iters=self.clip_iters,
+            adaptive_tol=self.adaptive_tol, warm_start=self.warm_start,
+        )
 
     @property
     def n_parts(self) -> int:
@@ -282,44 +309,59 @@ def phase_mprng(cfg: EngineConfig, state: ProtocolState, byz):
     return seed, mprng_ban
 
 
-def phase_butterfly(cfg: EngineConfig, state: ProtocolState, G, weights, seed):
-    """butterfly_clip: per-partition CenteredClip + the Alg. 6 broadcast
-    tables, optionally warm-started from the previous aggregate and/or run
-    with the adaptive early-exit budget (``cfg.adaptive_tol``). Returns the
-    max iteration count any partition ran as the last element — the
+def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
+                      seed):
+    """Spec-dispatched robust aggregation (``cfg.aggregator``).
+
+    Verifiable specs (ButterflyClip): per-partition CenteredClip + the
+    Alg. 6 broadcast tables, optionally warm-started from the previous
+    aggregate and/or run with the adaptive early-exit budget. The
     verification tables are always computed exactly once against the final
-    iterate, so downstream accusation semantics never see the budget."""
+    iterate, so downstream accusation semantics never see the budget.
+
+    Non-verifiable specs (mean, median, Krum, ...): the flat registry fn
+    runs over the stacked gradients; there are no broadcast tables
+    (z/s_tbl/norm_tbl come back None) and the caller degrades the
+    verification/accusation phases to no-ops.
+
+    Returns (agg (n_parts, part), parts, z, s_tbl, norm_tbl, iters_used).
+    """
+    spec = cfg.agg_spec()
+    if not spec.verifiable:
+        agg_fn = spec.build(cfg.n, cfg.d, use_pallas=cfg.use_pallas)
+        v0 = None
+        if spec.warm_startable and spec.get("warm_start", False):
+            v0 = jnp.where(
+                state.step > 0, bf.merge_parts(state.prev_agg, cfg.d), 0.0
+            )
+        flat, info = agg_fn(
+            G, weights if spec.weighted else None, v0, _phase_key(state, 2)
+        )
+        # keep the butterfly partition layout for the prev_agg carry
+        agg = bf.split_parts(
+            flat.astype(jnp.float32)[None, :], cfg.n_parts
+        )[0]
+        parts = bf.split_parts(G, cfg.n_parts)
+        return (agg, parts, None, None, None,
+                jnp.asarray(info.iters, jnp.int32))
+
+    p = spec.param_dict()
     z = bf.get_random_directions(seed, cfg.n_parts, cfg.part)
     v0 = None
-    if cfg.warm_start:
+    if p["warm_start"]:
         v0 = jnp.where(state.step > 0, state.prev_agg, 0.0)
-    iters_used = jnp.asarray(cfg.clip_iters, jnp.int32)
     if cfg.aggregator_attack and cfg.aggregator_scale > 0:
         # tables must be computed against the (possibly corrupted) received
         # aggregate, so aggregation and tables split into two calls here
-        if cfg.adaptive_tol is not None:
-            agg, parts, iters = bf.butterfly_clip_adaptive(
-                G, cfg.tau, cfg.adaptive_tol, cfg.clip_iters, weights=weights,
-                use_pallas=cfg.use_pallas, v0=v0,
-            )
-            iters_used = iters.max()
-        else:
-            agg, parts = bf.butterfly_clip(
-                G, tau=cfg.tau, n_iters=cfg.clip_iters, weights=weights,
-                use_pallas=cfg.use_pallas, v0=v0,
-            )
+        agg, parts, _s, _n, iters_used = bf.clip_aggregate(
+            G, p["tau"], p["n_iters"], adaptive_tol=p["adaptive_tol"],
+            weights=weights, use_pallas=cfg.use_pallas, v0=v0,
+        )
         return agg, parts, z, None, None, iters_used
-    if cfg.adaptive_tol is not None:
-        agg, parts, s_tbl, norm_tbl, iters = bf.butterfly_clip_verified_adaptive(
-            G, cfg.tau, z, cfg.adaptive_tol, cfg.clip_iters, weights=weights,
-            use_pallas=cfg.use_pallas, v0=v0,
-        )
-        iters_used = iters.max()
-    else:
-        agg, parts, s_tbl, norm_tbl = bf.butterfly_clip_verified(
-            G, cfg.tau, z, n_iters=cfg.clip_iters, weights=weights,
-            use_pallas=cfg.use_pallas, v0=v0,
-        )
+    agg, parts, s_tbl, norm_tbl, iters_used = bf.clip_aggregate(
+        G, p["tau"], p["n_iters"], z=z, adaptive_tol=p["adaptive_tol"],
+        weights=weights, use_pallas=cfg.use_pallas, v0=v0,
+    )
     return agg, parts, z, s_tbl, norm_tbl, iters_used
 
 
@@ -490,10 +532,16 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
     rows are zeroed internally, so their supplied values are irrelevant.
     Returns (new_state, StepOutputs).
     """
+    spec = cfg.agg_spec()
     byz = jnp.asarray(byz_mask) > 0
     active = state.active
     validator = state.validator * active
-    weights = active * (1.0 - validator)  # Alg. 1 L19: validators sit out
+    if spec.verifiable:
+        weights = active * (1.0 - validator)  # Alg. 1 L19: validators sit out
+    else:
+        # nothing to audit without the broadcast tables: no validator set-
+        # aside, every active peer contributes to the aggregate
+        weights = active
 
     keep = active[:, None] > 0
     G = jnp.where(keep, jnp.asarray(G, jnp.float32), 0.0)
@@ -505,30 +553,48 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
     # ---- MPRNG (shared seed + abort bans) --------------------------------
     seed, mprng_ban = phase_mprng(cfg, state, byz)
 
-    # ---- butterfly_clip (+ tables) ---------------------------------------
-    agg, parts, z, s_tbl, norm_tbl, iters_used = phase_butterfly(
+    # ---- aggregation (spec-dispatched, + tables when verifiable) ---------
+    agg, parts, z, s_tbl, norm_tbl, iters_used = phase_aggregation(
         cfg, state, G, weights, seed
     )
-    agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
-        cfg, state, agg, parts, z, byz, weights
-    )
-    if s_tbl is None:
-        s_tbl, norm_tbl = s2, n2
-    true_s, true_norm = s_tbl, norm_tbl
-    s_tbl = phase_misreport(cfg, s_tbl, corrupt, byz, active, weights)
+    if spec.verifiable:
+        agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
+            cfg, state, agg, parts, z, byz, weights
+        )
+        if s_tbl is None:
+            s_tbl, norm_tbl = s2, n2
+        true_s, true_norm = s_tbl, norm_tbl
+        s_tbl = phase_misreport(cfg, s_tbl, corrupt, byz, active, weights)
 
-    # ---- verify ----------------------------------------------------------
-    (accuse, sys_accuse, mismatch_s, cs_viol, chk_avg,
-     last_checked) = phase_verify(
-        cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
-        norm_tbl, true_norm, byz, weights,
-    )
+        # ---- verify ------------------------------------------------------
+        (accuse, sys_accuse, mismatch_s, cs_viol, chk_avg,
+         last_checked) = phase_verify(
+            cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
+            norm_tbl, true_norm, byz, weights,
+        )
 
-    # ---- accuse / ban ----------------------------------------------------
-    new_active, banned_now, reason, cheated, accused_inc = phase_accuse_ban(
-        cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
-        G, honest_G, agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
-    )
+        # ---- accuse / ban ------------------------------------------------
+        (new_active, banned_now, reason, cheated,
+         accused_inc) = phase_accuse_ban(
+            cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
+            G, honest_G, agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
+        )
+    else:
+        # non-verifiable aggregator: no tables -> no verification, no
+        # accusations, no bans (incl. the MPRNG abort rule, which is part
+        # of the same commit/reveal machinery). The attack still lands in
+        # the aggregate; only the DEFENSE's detection arm is absent.
+        n = cfg.n
+        accuse = jnp.zeros((n, n), bool)
+        sys_accuse = jnp.zeros((n,), bool)
+        cheated = jnp.zeros((n,), bool)
+        cs_viol = jnp.asarray(0, jnp.int32)
+        chk_avg = jnp.asarray(0, jnp.int32)
+        last_checked = state.last_checked
+        banned_now = jnp.zeros((n,), bool)
+        reason = jnp.zeros((n,), jnp.int32)
+        accused_inc = jnp.zeros((n,), jnp.int32)
+        new_active = active
 
     # ---- elect next validators ------------------------------------------
     next_validator = _elect(cfg, _phase_key(state, 4), new_active)

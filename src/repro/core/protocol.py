@@ -88,6 +88,7 @@ class BTARDProtocol:
         use_pallas: bool = False,
         warm_start: bool = False,
         adaptive_tol: float | None = None,
+        aggregator=None,  # AggregatorSpec | "name[:k=v,...]" | None (butterfly)
     ):
         self.n = n_peers
         self.d = d
@@ -113,6 +114,7 @@ class BTARDProtocol:
             use_pallas=use_pallas,
             warm_start=warm_start,
             adaptive_tol=adaptive_tol,
+            aggregator=aggregator,
         )
         self.byz_mask = jnp.asarray(
             [1.0 if i in self.byzantine else 0.0 for i in range(n_peers)],

@@ -8,10 +8,14 @@ Three step kinds per architecture:
 * BTARD train      — the paper's technique as a first-class distributed step:
                      stage 1 computes per-peer gradients (shard_map manual
                      over the peer axes = pod x data, auto over 'model');
-                     stage 2 is the butterfly robust all-reduce (fully-manual
-                     shard_map): all_to_all gradient partitions, CenteredClip
-                     per partition (optionally the Pallas kernel), the
-                     O(n^2)-scalar verification tables, all_gather back.
+                     stage 2 is the AggregatorSpec-dispatched robust
+                     all-reduce (fully-manual shard_map). The verifiable
+                     ButterflyClip spec runs the butterfly: all_to_all
+                     gradient partitions, CenteredClip per partition
+                     (optionally the Pallas kernel), the O(n^2)-scalar
+                     verification tables, all_gather back. Non-verifiable
+                     specs (mean, krum, ...) all_gather the stack and apply
+                     the registry fn (trusted-PS model, zero tables).
 * serve (prefill / decode) — auto-GSPMD with KV-cache shardings
                      (sequence-sharded for long_500k).
 """
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.aggregators import resolve_spec
 from repro.core.centered_clip import (
     centered_clip,
     centered_clip_adaptive,
@@ -151,29 +156,77 @@ def _collapse_peer_mesh(mesh):
     return Mesh(devs, ("peers",) + other), ("peers",)
 
 
-def butterfly_stage(
-    g_vec, peer_axes, n_peers, tau, clip_iters, weights, seed, use_pallas=False,
-    delta_max=None, v0_full=None, adaptive_tol=None,
+def aggregation_stage(
+    g_vec, peer_axes, n_peers, spec, weights, seed, use_pallas=False,
+    delta_max=None, v0_full=None, gather_axes=(),
 ):
-    """Fully-manual-region butterfly robust all-reduce of one local gradient
-    vector. Returns (aggregated vector, verification dict).
+    """Fully-manual-region robust all-reduce of one local gradient vector,
+    dispatched by :class:`~repro.core.aggregators.AggregatorSpec`. Returns
+    (aggregated vector, verification dict).
 
-    The local (model-shard) gradient vector is split into n_peers partitions;
-    partition j is robustly aggregated by peer j (all_to_all), exactly
-    Alg. 2 with partitions laid out over the TPU peer axis.
+    Verifiable specs (ButterflyClip) run the paper's butterfly topology:
+    the local (model-shard) gradient vector is split into n_peers
+    partitions; partition j is robustly aggregated by peer j (all_to_all),
+    exactly Alg. 2 with partitions laid out over the TPU peer axis —
+    CenteredClip params (tau / n_iters / adaptive_tol) come from the spec.
+
+    Non-verifiable specs (mean, median, Krum, ...) have no partition
+    ownership to verify: every peer all_gathers the full stack and applies
+    the registry fn (the trusted-PS communication model, O(n·d) per peer
+    instead of the butterfly's O(d)); the verification tables come back as
+    zeros and the launch-side ban policy never fires. ``gather_axes`` names
+    the NON-peer manual mesh axes (model shards): coordinatewise specs
+    apply per shard (exact — they decompose over coordinates), while
+    norm/distance-based specs (Krum, geometric median, CenteredClip) first
+    join the shards along those axes so the full-vector geometry — and
+    e.g. Krum's single global argmin — is preserved; the joined layout is
+    a fixed coordinate permutation of the parameter vector, irrelevant to
+    permutation-invariant fns, and each device slices its own shard back.
 
     v0_full: optional (d,) previous aggregated vector (replicated — every
-    peer holds it after last step's all_gather); each peer warm-starts its
-    partition's CenteredClip from its slice, cutting clip_iters (DESIGN.md).
-
-    adaptive_tol: when set, each peer's CenteredClip iterates only until
-    ||v_{l+1}-v_l|| <= adaptive_tol (clip_iters becomes the static cap) —
-    per-device while_loops with data-dependent trip counts are fine in the
-    manual region because the loop body contains no collectives; the
-    verification tables are computed exactly once against the final iterate,
-    so the broadcast protocol is budget-oblivious.
+    peer holds it after last step's all_gather); warm-startable specs seed
+    their iteration from it, cutting the budget (DESIGN.md). Adaptive
+    specs' per-device while_loops with data-dependent trip counts are fine
+    in the manual region because the loop body contains no collectives;
+    the verification tables are computed exactly once against the final
+    iterate, so the broadcast protocol is budget-oblivious.
     """
+    spec = resolve_spec(spec)
     d = g_vec.shape[0]
+    if not spec.verifiable:
+        stack = jax.lax.all_gather(g_vec, peer_axes)  # (n_peers, d) each
+        v0 = None
+        if v0_full is not None and spec.warm_startable:
+            v0 = v0_full.astype(jnp.float32)
+        join = tuple(gather_axes) if not spec.coordinatewise else ()
+        if join:
+            stack = jax.lax.all_gather(stack, join, axis=1, tiled=True)
+            if v0 is not None:
+                v0 = jax.lax.all_gather(v0, join, axis=0, tiled=True)
+        agg_fn = spec.build(n_peers, stack.shape[1], use_pallas=use_pallas)
+        flat, info = agg_fn(
+            stack.astype(jnp.float32),
+            weights if spec.weighted else None,
+            v0,
+            jax.random.key(seed),
+        )
+        if join:  # slice this device's model shard back out
+            my = jnp.zeros((), jnp.int32)
+            for a in join:  # row-major over the joined axes == gather order
+                my = my * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+            flat = jax.lax.dynamic_slice_in_dim(flat, my * d, d)
+        verif = {
+            "checksum": jnp.zeros((1,), jnp.float32),
+            "votes": jnp.zeros((1,), jnp.float32),
+            "clip_iters": jnp.asarray(info.iters, jnp.int32)[None],
+            "s_table": jnp.zeros((n_peers, n_peers), jnp.float32),
+            "norm_table": jnp.zeros((n_peers, n_peers), jnp.float32),
+        }
+        return flat.astype(jnp.float32), verif
+
+    p = spec.param_dict()
+    tau, clip_iters = p["tau"], p["n_iters"]
+    adaptive_tol = p["adaptive_tol"]
     part = -(-d // n_peers)
     pad = part * n_peers - d
     if pad:
@@ -261,6 +314,32 @@ def butterfly_stage(
     return full, verif
 
 
+def butterfly_stage(
+    g_vec, peer_axes, n_peers, tau, clip_iters, weights, seed, use_pallas=False,
+    delta_max=None, v0_full=None, adaptive_tol=None,
+):
+    """DEPRECATED shim — resolves to :func:`aggregation_stage` with the
+    equivalent ButterflyClip :class:`AggregatorSpec`."""
+    import warnings
+
+    warnings.warn(
+        "butterfly_stage is deprecated; call aggregation_stage with an "
+        "AggregatorSpec (repro.core.aggregators) instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    from repro.core.aggregators import AggregatorSpec
+
+    spec = AggregatorSpec(
+        "butterfly_clip",
+        (("adaptive_tol", adaptive_tol), ("n_iters", int(clip_iters)),
+         ("tau", float(tau)), ("warm_start", v0_full is not None)),
+    )
+    return aggregation_stage(
+        g_vec, peer_axes, n_peers, spec, weights, seed,
+        use_pallas=use_pallas, delta_max=delta_max, v0_full=v0_full,
+    )
+
+
 def device_attack(grads_vec, byz_mask, peer_axes, kind, key, lam=100.0):
     """Device-side Byzantine simulation on the local gradient vector."""
     my_idx = jax.lax.axis_index(peer_axes)
@@ -301,15 +380,31 @@ def _build_btard_step(
     transport_dtype=jnp.float32,
     warm_start: bool = False,
     adaptive_tol: float | None = None,
+    aggregator=None,
 ):
     """Shared construction for the single-step and scanned BTARD steps.
+
+    ``aggregator`` is an :class:`AggregatorSpec` / ``"name[:k=v,...]"``
+    string / None (-> flagship ButterflyClip); the legacy knobs (tau /
+    clip_iters / adaptive_tol / warm_start) fill the spec's declared params
+    as defaults. The shard_map carry/specs derive from the resolved spec's
+    capability flags: only a warm-startable spec with ``warm_start`` set
+    threads the previous-aggregate input into the aggregation region.
 
     Returns (step_core, mesh, specs dict, abstract args) where
     step_core(params, opt_state, batch, step, seed, byz_mask, weights,
     v_prev) -> (params, opt_state, metrics, verif, v_agg); v_prev / v_agg
     is the flattened previous/current aggregate (the warm-start carry).
     """
+    spec = resolve_spec(aggregator).with_defaults(
+        tau=tau, n_iters=clip_iters, max_iters=clip_iters,
+        adaptive_tol=adaptive_tol, warm_start=warm_start,
+    )
+    carry_v0 = spec.warm_startable and bool(spec.get("warm_start", False))
     mesh, peer_axes = _collapse_peer_mesh(mesh)
+    # the non-peer manual axes (model shards) — non-coordinatewise specs
+    # join these inside aggregation_stage to see full-vector geometry
+    model_axes = tuple(a for a in mesh.axis_names if a not in peer_axes)
     set_mesh(mesh)
     cfg = model.cfg
     n_peers = int(np.prod([mesh.shape[a] for a in peer_axes]))
@@ -361,13 +456,13 @@ def _build_btard_step(
         vec = _flatten_local([l[0] for l in leaves], transport_dtype)
         vec = device_attack(vec, byz_mask, peer_axes, attack, key)
         v0_full = None
-        if warm_start:
+        if carry_v0:
             # previous aggregate, flattened in the SAME leaf order as vec
             v0_full = _flatten_local(jax.tree.leaves(rest[0]), jnp.float32)
-        agg_vec, verif = butterfly_stage(
-            vec, peer_axes, n_peers, tau, clip_iters, weights, seed,
+        agg_vec, verif = aggregation_stage(
+            vec, peer_axes, n_peers, spec, weights, seed,
             use_pallas=use_pallas, delta_max=delta_max, v0_full=v0_full,
-            adaptive_tol=adaptive_tol,
+            gather_axes=model_axes,
         )
         agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
         agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
@@ -381,7 +476,7 @@ def _build_btard_step(
         butterfly_all,
         mesh=mesh,
         in_specs=(manual_pspecs, P(), P(), P(), P())
-        + ((agg_specs,) if warm_start else ()),
+        + ((agg_specs,) if carry_v0 else ()),
         out_specs=(
             agg_specs,
             {
@@ -400,7 +495,7 @@ def _build_btard_step(
                   v_prev=None):
         loss, grads = stage1(params, batch)
         key = jax.random.fold_in(jax.random.key(0), step)
-        rest = (v_prev,) if warm_start else ()
+        rest = (v_prev,) if carry_v0 else ()
         agg, verif = stage2(grads, seed, byz_mask, weights, key, *rest)
         updates, opt_state = optimizer.update(agg, opt_state, params, step)
         params = apply_updates(params, updates)
@@ -456,6 +551,7 @@ def make_btard_train_step(
     zero1: bool = True,
     transport_dtype=jnp.float32,
     adaptive_tol: float | None = None,
+    aggregator=None,
 ):
     """Returns (jitted step, abstract args).
 
@@ -464,13 +560,21 @@ def make_btard_train_step(
     Params are replicated over the peer axes (each peer = full replica,
     model-sharded over 'model'); optimizer state is ZeRO-1-sharded over the
     peer axis when zero1 (the butterfly partition owner updates its shard —
-    exactly Alg. 7's per-partition ownership).
+    exactly Alg. 7's per-partition ownership). ``aggregator`` selects the
+    robust aggregation stage by AggregatorSpec (default ButterflyClip).
+
+    The single-step API carries no previous aggregate between calls, so a
+    spec's ``warm_start`` is forced off here — use
+    :func:`make_btard_scan_train_step`, whose v_prev carry implements it.
     """
+    spec = resolve_spec(aggregator)
+    if "warm_start" in spec.definition.param_names:
+        spec = spec.override(warm_start=False)
     step_core, mesh, specs, abstract_args = _build_btard_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=False,
-        adaptive_tol=adaptive_tol,
+        adaptive_tol=adaptive_tol, aggregator=spec,
     )
 
     def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
@@ -513,6 +617,7 @@ def make_btard_scan_train_step(
     transport_dtype=jnp.float32,
     warm_start: bool = False,
     adaptive_tol: float | None = None,
+    aggregator=None,
     pipeline=None,
     extras=None,
 ):
@@ -545,7 +650,7 @@ def make_btard_scan_train_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=warm_start,
-        adaptive_tol=adaptive_tol,
+        adaptive_tol=adaptive_tol, aggregator=aggregator,
     )
     agg_shardings = _named(mesh, specs["agg"])
     # the in-scan generator is pinned REPLICATED: every peer generates the

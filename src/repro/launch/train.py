@@ -14,13 +14,59 @@ Examples (CPU bring-up, 8 fake devices):
   # generated IN-SCAN from the public seed chain, warm-started CenteredClip
   # with the adaptive early-exit budget
   python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 8 \\
-      --mesh 4x2 --steps 20 --scan-steps 5 --warm-start-clip \\
-      --adaptive-clip 1e-4
+      --mesh 4x2 --steps 20 --scan-steps 5 \\
+      --aggregator butterfly_clip:warm_start=true,adaptive_tol=1e-4
+  # swap the robust aggregator (paper Fig. 3 comparison axis): any
+  # registered AggregatorSpec name, with optional static params
+  python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 8 \\
+      --mesh 4x2 --steps 10 --scan-steps 5 --attack sign_flip \\
+      --byzantine 1,3 --aggregator krum
 """
 import argparse
 import os
 import sys
 import time
+import warnings
+
+
+def resolve_cli_aggregator(text, warm_start_clip=False, adaptive_clip=None,
+                           n_byzantine=0):
+    """Parse ``--aggregator NAME[:k=v,...]`` and fold the DEPRECATED
+    ``--warm-start-clip`` / ``--adaptive-clip TOL`` flags into the spec
+    (they keep working as aliases for the equivalent spec params).
+    Krum's ``n_byzantine`` defaults to the --byzantine list length."""
+    from repro.core.aggregators import AggregatorSpec, with_byzantine_default
+
+    spec = AggregatorSpec.parse(text)
+    shims = {}
+    if warm_start_clip:
+        warnings.warn(
+            "--warm-start-clip is deprecated; use "
+            "--aggregator butterfly_clip:warm_start=true",
+            DeprecationWarning, stacklevel=2,
+        )
+        shims["warm_start"] = True
+    if adaptive_clip is not None:
+        warnings.warn(
+            "--adaptive-clip is deprecated; use "
+            f"--aggregator butterfly_clip:adaptive_tol={adaptive_clip}",
+            DeprecationWarning, stacklevel=2,
+        )
+        shims["adaptive_tol"] = adaptive_clip
+    if shims:
+        accepted = set(spec.definition.param_names)
+        dropped = [k for k in shims if k not in accepted]
+        if dropped:
+            warnings.warn(
+                f"aggregator {spec.name!r} takes no {dropped}; the "
+                "deprecated clip flags only apply to warm-startable/"
+                "adaptive specs and are ignored here",
+                stacklevel=2,
+            )
+        spec = spec.override(
+            **{k: v for k, v in shims.items() if k in accepted}
+        )
+    return with_byzantine_default(spec, n_byzantine)
 
 
 def main():
@@ -44,13 +90,25 @@ def main():
     ap.add_argument("--scan-steps", type=int, default=0,
                     help="BTARD rounds per jitted lax.scan dispatch "
                          "(0 = one dispatch per round)")
+    ap.add_argument("--aggregator", default="butterfly_clip",
+                    metavar="NAME[:k=v,...]",
+                    help="robust aggregator spec for the btard defense: "
+                         "butterfly_clip (verifiable flagship; params tau, "
+                         "n_iters, warm_start, adaptive_tol), mean, "
+                         "coordinate_median, trimmed_mean[:trim_ratio=R], "
+                         "geometric_median, krum[:n_byzantine=B], "
+                         "centered_clip[:tau=T]. Non-verifiable specs run "
+                         "without the verification/ban machinery. --tau and "
+                         "--clip-iters fill the spec's defaults; explicit "
+                         "spec params win.")
     ap.add_argument("--warm-start-clip", action="store_true",
-                    help="CenteredClip v0 = previous aggregate "
+                    help="DEPRECATED alias for "
+                         "--aggregator butterfly_clip:warm_start=true "
                          "(implies the scan step; see kernels/DESIGN.md)")
     ap.add_argument("--adaptive-clip", type=float, default=None, metavar="TOL",
-                    help="adaptive CenteredClip: stop when ||v_{l+1}-v_l|| "
-                         "<= TOL (--clip-iters becomes the static cap); "
-                         "composes with --warm-start-clip")
+                    help="DEPRECATED alias for "
+                         "--aggregator butterfly_clip:adaptive_tol=TOL "
+                         "(--clip-iters becomes the static cap)")
     ap.add_argument("--host-data", action="store_true",
                     help="feed host-precomputed batches to the scan step "
                          "instead of generating them in-scan on device "
@@ -63,6 +121,8 @@ def main():
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.host_devices}"
         )
+
+    byz = set(int(x) for x in args.byzantine.split(",") if x)
 
     import jax
     import jax.numpy as jnp
@@ -93,6 +153,11 @@ def main():
     opt = sgd(args.lr, momentum=0.9, nesterov=True)
     n_peers = int(np.prod([mesh.shape[a] for a in names if a != "model"]))
 
+    agg_spec = resolve_cli_aggregator(
+        args.aggregator, args.warm_start_clip, args.adaptive_clip, len(byz)
+    )
+    warm = bool(agg_spec.warm_startable and agg_spec.get("warm_start", False))
+
     extras = None
     if model.cfg.encoder_len:
         extras = {
@@ -100,7 +165,7 @@ def main():
         }
     pipe = TokenPipeline(model.cfg.vocab_size, args.seq, args.batch)
 
-    n_scan = max(args.scan_steps, 1 if args.warm_start_clip else 0)
+    n_scan = max(args.scan_steps, 1 if warm else 0)
     # the scan path is device-resident by default: batches come from the
     # public peer_key chain INSIDE the compiled scan (same bits as the host
     # pipeline), so each dispatch moves only two (n_scan,) i32 vectors
@@ -109,15 +174,14 @@ def main():
         step_fn, _ = make_btard_scan_train_step(
             model, opt, mesh, shape, n_scan_steps=n_scan, tau=args.tau,
             clip_iters=args.clip_iters, attack=args.attack,
-            use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
-            adaptive_tol=args.adaptive_clip,
+            use_pallas=args.use_pallas, aggregator=agg_spec,
             pipeline=pipe if device_data else None, extras=extras,
         )
     elif args.defense == "btard":
         step_fn, _ = make_btard_train_step(
             model, opt, mesh, shape, tau=args.tau, clip_iters=args.clip_iters,
             attack=args.attack, use_pallas=args.use_pallas,
-            adaptive_tol=args.adaptive_clip,
+            aggregator=agg_spec,
         )
     else:
         step_fn, _ = make_baseline_train_step(model, opt, mesh, shape)
@@ -125,7 +189,6 @@ def main():
     params = model.init_params(jax.random.key(0))
     opt_state = opt.init(params)
 
-    byz = set(int(x) for x in args.byzantine.split(",") if x)
     byz_mask = jnp.asarray(
         [1.0 if i in byz else 0.0 for i in range(n_peers)], jnp.float32
     )
@@ -135,8 +198,8 @@ def main():
 
     print(f"arch={model.cfg.name} params={model.param_count():,} "
           f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)} "
-          f"scan={n_scan or '-'} warm={args.warm_start_clip} "
-          f"adaptive={args.adaptive_clip or '-'} "
+          f"aggregator={agg_spec.canonical()} "
+          f"scan={n_scan or '-'} "
           f"data={'device' if device_data else 'host'}")
     t0 = time.time()
     if args.defense == "btard" and n_scan:
@@ -148,8 +211,7 @@ def main():
             rem_fn, _ = make_btard_scan_train_step(
                 model, opt, mesh, shape, n_scan_steps=rem, tau=args.tau,
                 clip_iters=args.clip_iters, attack=args.attack,
-                use_pallas=args.use_pallas, warm_start=args.warm_start_clip,
-                adaptive_tol=args.adaptive_clip,
+                use_pallas=args.use_pallas, aggregator=agg_spec,
                 pipeline=pipe if device_data else None, extras=extras,
             )
         for chunk in range(0, args.steps, n_scan):

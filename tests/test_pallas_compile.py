@@ -188,6 +188,41 @@ def test_adaptive_step_kernel_lowers_natively():
             np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_spec_dispatched_fused_kernels_lower(adaptive):
+    """The AggregatorSpec route into the fused kernels: verified_aggregate
+    (the engine's aggregation phase) with use_pallas=True must reach the
+    fused / adaptive Mosaic kernels through spec dispatch. Under
+    REPRO_PALLAS_COMPILE=1 (the CI Mosaic job) this lowers natively; in
+    interpret mode it doubles as a spec-vs-jnp equivalence check."""
+    from repro.core.aggregators import AggregatorSpec, verified_aggregate
+    from repro.kernels import ops
+
+    n, d = 8, 8 * D
+    g = _stack(14, (n, d))
+    z = _stack(15, (n, D))
+    params = (("adaptive_tol", 1e-4 if adaptive else None),
+              ("n_iters", ITERS), ("tau", 1.0), ("warm_start", False))
+    spec = AggregatorSpec("butterfly_clip", params)
+
+    def fn(gg, zz):
+        agg, _parts, s, norms, iters = verified_aggregate(
+            spec, gg, zz, use_pallas=True
+        )
+        return agg, s, norms, iters
+
+    if ops._INTERPRET:
+        got = jax.jit(fn)(g, z)
+        ref = verified_aggregate(spec, g, z, use_pallas=False)
+        want = (ref[0], ref[2], ref[3], ref[4])
+        for a, b in zip(got[:3], want[:3]):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), atol=1e-4
+            )
+    else:
+        _validate(fn, g, z)
+
+
 @pytest.mark.parametrize("warm", [False, True])
 def test_adaptive_driver_lowers_natively(warm):
     """The full early-exit driver: lax.while_loop wrapped around the Mosaic
