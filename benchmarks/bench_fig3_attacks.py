@@ -18,15 +18,20 @@ from benchmarks.common import emit, run_cell
 ATTACKS = ["none", "sign_flip", "random_direction", "label_flip", "ipm_06",
            "alie"]
 # "btard" = the verifiable butterfly_clip spec; the rest are the registered
-# baseline aggregators (core.aggregators.registered_aggregators()).
+# baseline aggregators (core.aggregators.registered_aggregators()), incl.
+# the verified:* wrapped coordinatewise baselines — same numerics as their
+# base column, but with the generalized-digest detection arm LIVE (bans).
 AGGREGATORS = ["btard", "mean", "coordinate_median", "trimmed_mean",
-               "geometric_median", "krum", "centered_clip"]
+               "geometric_median", "krum", "centered_clip",
+               "verified:mean", "verified:trimmed_mean",
+               "verified:coordinate_median"]
 
 
 def main(fast=True):
     attacks = ATTACKS if not fast else ["none", "sign_flip", "ipm_06", "alie"]
     aggregators = AGGREGATORS if not fast else [
-        "btard", "mean", "krum", "centered_clip", "trimmed_mean"
+        "btard", "mean", "krum", "centered_clip", "trimmed_mean",
+        "verified:trimmed_mean",
     ]
     steps = 25 if fast else 35
     for attack in attacks:

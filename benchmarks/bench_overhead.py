@@ -13,7 +13,10 @@ Four views:
     n_iters + 2 (see src/repro/kernels/DESIGN.md);
   * the communication model: per-peer bytes for AR vs BTARD
     (2d for ring/butterfly AR; BTARD adds O(n^2) scalars — independent of d,
-    exactly the paper's §3.1 cost accounting);
+    exactly the paper's §3.1 cost accounting), now PER AGGREGATOR SPEC:
+    verifiable specs (the flagship and every verified:* wrapper) ride the
+    butterfly at O(d) per peer plus size-independent table bytes, while the
+    unwrapped baselines pay the trusted-PS O(n*d) all_gather;
   * the scan-engine view: steps/s of the legacy host protocol loop vs the
     jitted lax.scan ProtocolState engine (core.engine), at the default
     clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json.
@@ -48,6 +51,44 @@ def comm_model(n, d, bytes_per=4):
     ar = 2 * d * bytes_per  # reduce-scatter + all-gather per peer
     btard_extra = (2 * n * n + 3 * n) * bytes_per  # s-table, norms, hashes, mprng
     return ar, btard_extra
+
+
+def comm_model_per_spec(n, d, bytes_per=4):
+    """Per-peer communication bytes per robust all-reduce, by registered
+    AggregatorSpec (launch/steps.aggregation_stage topologies):
+
+    * verifiable specs (butterfly_clip + every verified:* wrapper) run the
+      butterfly — all_to_all its d/n-sized partition to every peer (~d
+      sent) + the aggregated-partition all_gather (~d received) + the
+      O(n^2)-scalar broadcast tables, independent of d;
+    * non-verifiable specs all_gather the FULL peer stack (the trusted-PS
+      model): n*d received per peer, zero tables.
+
+    This is the paper's §3.1 cost accounting extended across the spec
+    registry: wrapping a baseline into its verified: form REPLACES the
+    O(n*d) PS gather with the O(d)-per-peer butterfly plus size-independent
+    table traffic — verification makes the communication model BETTER, not
+    worse, for n > 2.
+    """
+    from repro.core.aggregators import REGISTRY
+
+    out = {}
+    for name, defn in sorted(REGISTRY.items()):
+        if defn.verifiable:
+            table = (2 * n * n + 3 * n) * bytes_per
+            per_peer = 2 * d * bytes_per + table
+            topology = "butterfly"
+        else:
+            table = 0
+            per_peer = (n + 1) * d * bytes_per  # send d, gather the n*d stack
+            topology = "ps_all_gather"
+        out[name] = {
+            "topology": topology,
+            "per_peer_bytes": per_peer,
+            "table_bytes": table,
+            "per_peer_over_ar": per_peer / (2 * d * bytes_per),
+        }
+    return out
 
 
 def hbm_pass_model(n_iters, n, d, bytes_per=4, adaptive_iters=2):
@@ -319,12 +360,23 @@ def main(fast=True, out_dir=None):
                 "comm_btard_extra_bytes": extra,
             }
         )
+    # per-aggregator communication model at the largest measured dim: the
+    # verified: wrapper's butterfly O(d) per peer vs the PS O(n*d) gather
+    comm_per_spec = comm_model_per_spec(n, dims[-1])
+    for spec_name, cell in comm_per_spec.items():
+        emit(
+            f"overhead/comm/{spec_name}",
+            cell["per_peer_bytes"] / 1e3,
+            f"topology={cell['topology']};table_bytes={cell['table_bytes']};"
+            f"per_peer_over_ar={cell['per_peer_over_ar']:.2f}",
+        )
     payload = {
         "bench": "overhead",
         "backend": jax.default_backend(),
         "pallas_mode": "interpret"
         if os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
         else "compiled",
+        "comm_per_spec": {"n_peers": n, "d": dims[-1], "specs": comm_per_spec},
         "records": records,
     }
     with open(json_path, "w") as f:

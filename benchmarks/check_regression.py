@@ -14,7 +14,12 @@ Compares freshly generated BENCH_*.json (``bench_overhead.py --quick
   ~1.7x on the committed baseline).
 * protocol invariants — every cell converges (acc within ACC_SLACK of the
   baseline) and bans exactly the baseline's Byzantine count. A perf "win"
-  that changes bans is a correctness regression, not a speedup.
+  that changes bans is a correctness regression, not a speedup. The
+  aggregator_comparison ban columns extend this to every verifiable spec:
+  verified:* wrapped baselines must keep banning (and match the committed
+  count), non-verifiable ones must never ban; the per-spec communication
+  model (butterfly vs PS all_gather topology, table bytes) is analytic and
+  gated exactly.
 * absolute steps/s — fresh >= baseline * (1 - tol). The band is wide
   (default 0.6) because hosted runners are noisy and slower than the dev
   machine; the ratio invariants above are the sharp gate.
@@ -42,7 +47,9 @@ CELLS = ("legacy_loop", "scan_engine", "scan_engine_warm15",
 # aggregator_comparison block (keep in sync with
 # repro.core.aggregators.registered_aggregators())
 AGG_NAMES = ("butterfly_clip", "centered_clip", "coordinate_median",
-             "geometric_median", "krum", "mean", "trimmed_mean")
+             "geometric_median", "krum", "mean", "trimmed_mean",
+             "verified:coordinate_median", "verified:mean",
+             "verified:trimmed_mean")
 
 
 def _load(path):
@@ -79,6 +86,33 @@ def check_overhead(fresh, base, errors):
             "gate compared nothing; align the --quick dims with the "
             "baseline or regenerate it"
         )
+
+    # per-spec communication model — analytic, so gate it EXACTLY like the
+    # pass counts: every spec present, verifiable specs on the butterfly
+    # with size-independent table bytes, non-verifiable on the PS gather.
+    comm = fresh.get("comm_per_spec")
+    if comm is None:
+        errors.append("fresh BENCH_overhead.json missing comm_per_spec block")
+        return
+    specs = comm.get("specs", {})
+    for name in AGG_NAMES:
+        cell = specs.get(name)
+        if cell is None:
+            errors.append(f"comm_per_spec missing spec: {name}")
+            continue
+        verifiable = name == "butterfly_clip" or name.startswith("verified:")
+        want_topo = "butterfly" if verifiable else "ps_all_gather"
+        if cell.get("topology") != want_topo:
+            errors.append(
+                f"comm_per_spec[{name}]: topology {cell.get('topology')!r} "
+                f"!= {want_topo!r} (launch dispatch drift)"
+            )
+        if verifiable != (cell.get("table_bytes", 0) > 0):
+            errors.append(
+                f"comm_per_spec[{name}]: table_bytes "
+                f"{cell.get('table_bytes')} inconsistent with "
+                f"verifiable={verifiable}"
+            )
 
 
 def check_scan(fresh, base, tol, errors):
@@ -148,18 +182,31 @@ def check_scan(fresh, base, tol, errors):
                 f"aggregator_comparison[{name}] not jit-clean "
                 f"(steps_per_s={cell.get('steps_per_s')})"
             )
-        if not cell.get("verifiable") and cell.get("banned", 0) != 0:
-            errors.append(
-                f"aggregator_comparison[{name}]: non-verifiable spec banned "
-                f"{cell['banned']} peers (verification must be a no-op)"
-            )
         bcell = (base_block or {}).get(name)
-        if name == "butterfly_clip" and bcell is not None:
-            if cell.get("banned") != bcell.get("banned"):
+        if not cell.get("verifiable"):
+            if cell.get("banned", 0) != 0:
                 errors.append(
-                    "aggregator_comparison[butterfly_clip]: ban count "
-                    f"changed {bcell.get('banned')} -> {cell.get('banned')}"
+                    f"aggregator_comparison[{name}]: non-verifiable spec "
+                    f"banned {cell['banned']} peers (verification must be a "
+                    "no-op)"
                 )
+            continue
+        # verifiable column (flagship + every verified:* wrapped spec):
+        # the detection arm must fire — the whole point of the wrapper —
+        # and the ban column must match the committed baseline exactly
+        # (a perf "win" that changes bans is a protocol regression).
+        if cell.get("banned", 0) <= 0:
+            errors.append(
+                f"aggregator_comparison[{name}]: verifiable spec banned "
+                "nobody under the Byzantine workload (detection arm "
+                "regressed)"
+            )
+        if bcell is not None and cell.get("banned") != bcell.get("banned"):
+            errors.append(
+                f"aggregator_comparison[{name}]: ban count changed "
+                f"{bcell.get('banned')} -> {cell.get('banned')}"
+            )
+        if name == "butterfly_clip" and bcell is not None:
             if cell.get("acc", 0.0) < bcell.get("acc", 0.0) - ACC_SLACK:
                 errors.append(
                     "aggregator_comparison[butterfly_clip]: accuracy "

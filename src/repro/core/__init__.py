@@ -5,6 +5,7 @@ from repro.core.aggregators import (  # noqa: F401
     aggregate,
     registered_aggregators,
     resolve_spec,
+    verified,
     verified_aggregate,
 )
 from repro.core.centered_clip import (  # noqa: F401

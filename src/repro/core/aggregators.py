@@ -27,8 +27,11 @@ Two layers live here:
    Capability flags drive how the rest of the stack degrades:
 
    * ``verifiable``  — supports the Alg. 6 broadcast tables, so the
-     engine's verification/accusation/ban phases run (only ButterflyClip);
-     non-verifiable specs degrade those phases to no-ops.
+     engine's verification/accusation/ban phases run: the ButterflyClip
+     flagship (CenteredClip-residual tables) and every ``verified:<base>``
+     wrapper over a coordinatewise baseline (generalized contribution
+     digests — ``core.verification``); non-verifiable specs degrade those
+     phases to no-ops.
    * ``weighted``    — honours the (n,) ban mask (all registered specs).
    * ``warm_startable`` — accepts ``v0`` (the previous aggregate).
    * ``adaptive``    — iteration count is data-dependent (reported via
@@ -317,7 +320,15 @@ class AggregatorSpec:
     # -- construction / display ---------------------------------------------
     @classmethod
     def parse(cls, text: str) -> "AggregatorSpec":
-        """Parse ``NAME[:k=v,...]`` (the ``--aggregator`` CLI syntax)."""
+        """Parse ``NAME[:k=v,...]`` (the ``--aggregator`` CLI syntax).
+
+        ``verified:BASE[:k=v,...]`` parses the base spec and lifts it via
+        the :func:`verified` combinator, so the wrapped registry names
+        (``verified:mean``, ``verified:trimmed_mean``, ...) round-trip
+        through ``canonical()`` like any other spec."""
+        text = text.strip()
+        if text.startswith("verified:"):
+            return verified(cls.parse(text[len("verified:"):]))
         name, _, tail = text.partition(":")
         name = name.strip()
         spec = cls(name)
@@ -357,6 +368,20 @@ def resolve_spec(spec) -> AggregatorSpec:
     if isinstance(spec, str):
         return AggregatorSpec.parse(spec)
     raise TypeError(f"not an aggregator spec: {spec!r}")
+
+
+def verified(spec) -> AggregatorSpec:
+    """Registry combinator: lift a spec into its verifiable form.
+
+    Coordinatewise baselines (mean, trimmed_mean, coordinate_median) map to
+    the ``verified:<name>`` wrapper (same params, capability flags
+    recomputed: verifiable=True, warm_startable=False); already-verifiable
+    specs come back unchanged; full-vector specs (krum, geometric_median,
+    centered_clip) raise. Implementation: :mod:`repro.core.verification`.
+    """
+    from repro.core import verification as _verification
+
+    return _verification.verified(spec)
 
 
 def with_byzantine_default(spec: AggregatorSpec,
@@ -493,6 +518,10 @@ register(AggregatorDef(
     adaptive=True,
 ))
 
+# the verified:<base> wrappers over the coordinatewise baselines register
+# themselves on import (core.verification.register_verified_wrappers)
+import repro.core.verification  # noqa: E402,F401  (registration side effect)
+
 
 # ---------------------------------------------------------------------------
 # Spec-level entry points
@@ -510,24 +539,17 @@ def verified_aggregate(spec, grads, z, weights=None, v0=None,
     broadcast tables, in the butterfly partition layout.
 
     grads: (n, d); z: (n_parts, part) unit directions (MPRNG seed);
-    v0: optional (n_parts, part) warm start (previous aggregate).
-    Returns (agg (n_parts, part), parts (n, n_parts, part), s (n, n_parts),
-    norms (n, n_parts), iters () i32). Raises for non-verifiable specs —
-    callers degrade verification to a no-op instead (core.engine).
+    v0: optional (n_parts, part) warm start (previous aggregate;
+    butterfly_clip only). Returns (agg (n_parts, part), parts
+    (n, n_parts, part), s (n, n_parts), norms (n, n_parts), iters () i32).
+    butterfly_clip reports the tau-clipped residual tables; ``verified:*``
+    wrapped specs report the generalized contribution digests
+    (``core.verification``). Raises for non-verifiable specs — callers
+    degrade verification to a no-op instead (core.engine).
     """
-    from repro.core import butterfly as bf
+    from repro.core import verification as _verification
 
-    spec = resolve_spec(spec)
-    if not spec.verifiable:
-        raise ValueError(
-            f"aggregator {spec.name!r} is not verifiable — it produces no "
-            "broadcast tables; run it through aggregate() and skip the "
-            "verification phases"
-        )
-    p = spec.param_dict()
-    if not p.get("warm_start"):
-        v0 = None
-    return bf.clip_aggregate(
-        grads, p["tau"], p["n_iters"], z=z, adaptive_tol=p["adaptive_tol"],
-        weights=weights, use_pallas=use_pallas, v0=v0,
+    return _verification.spec_aggregate(
+        resolve_spec(spec), grads, z=z, weights=weights, v0=v0,
+        use_pallas=use_pallas,
     )

@@ -19,6 +19,7 @@ from repro.core.aggregators import (
     AGGREGATORS,
     REGISTRY,
     AggregatorSpec,
+    resolve_spec,
     with_byzantine_default,
 )
 from repro.core import attacks as attacks_mod
@@ -33,7 +34,8 @@ class TrainerConfig:
     n_peers: int = 16
     byzantine: tuple = ()
     attack: AttackConfig = field(default_factory=AttackConfig)
-    defense: str = "btard"  # btard | mean | coordinate_median | geometric_median | trimmed_mean | krum | centered_clip
+    defense: str = "btard"  # btard | any registered AggregatorSpec name,
+    # incl. the verified:<base> wrapped coordinatewise specs (bannable)
     tau: float = 1.0
     clip_iters: int = 60
     m_validators: int = 1
@@ -77,6 +79,13 @@ class BTARDTrainer:
                 AggregatorSpec(cfg.defense), len(cfg.byzantine)
             )
         self._engine_aggregator = agg
+        # verifiable defenses (the flagship AND the verified:* wrapped
+        # coordinatewise specs) run the full accuse/ban protocol in BOTH
+        # entry points; only non-verifiable baselines take the legacy
+        # trusted-PS _baseline_step on the host path.
+        self._protocol_defense = cfg.defense == "btard" or (
+            agg is not None and resolve_spec(agg).verifiable
+        )
         self.protocol = BTARDProtocol(
             n_peers=cfg.n_peers,
             d=self.d,
@@ -145,7 +154,7 @@ class BTARDTrainer:
     # ------------------------------------------------------------------
     def train_step(self):
         t = self._step
-        if self.cfg.defense == "btard":
+        if self._protocol_defense:
             g, info = self.protocol.step(self.params, t)
         else:
             g, info = self._baseline_step(t)

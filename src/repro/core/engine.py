@@ -11,10 +11,14 @@ steps run under ``lax.scan`` with zero host synchronisation:
     -> accuse/ban
 
 The aggregation phase is spec-dispatched (``EngineConfig.aggregator``,
-``core.aggregators``): the verifiable ButterflyClip flagship runs the full
-verification pipeline; non-verifiable baseline specs (mean, median, Krum,
-...) run the same step with verify/accuse/ban degraded to no-ops — the
-paper's Fig. 3 comparison axis inside one engine.
+``core.aggregators``): verifiable specs — the ButterflyClip flagship and
+the ``verified:<base>`` wrappers over the coordinatewise baselines
+(``core.verification``: generalized contribution digests in place of the
+CenteredClip-residual tables) — run the full verification pipeline;
+non-verifiable baseline specs (krum, geometric_median, trusted-PS
+centered_clip and the unwrapped coordinatewise fns) run the same step with
+verify/accuse/ban degraded to no-ops — the paper's Fig. 3 comparison axis
+inside one engine.
 
 Equivalences to the wire protocol (all recorded in kernels/DESIGN.md):
 
@@ -47,6 +51,7 @@ import jax.numpy as jnp
 from repro.core import aggregators as agg_mod
 from repro.core import attacks as attacks_mod
 from repro.core import butterfly as bf
+from repro.core import verification as verif_mod
 
 # Ban reason codes (StepOutputs.ban_reason_now / ProtocolState.ban_reason)
 BAN_NONE = 0
@@ -313,11 +318,14 @@ def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
                       seed):
     """Spec-dispatched robust aggregation (``cfg.aggregator``).
 
-    Verifiable specs (ButterflyClip): per-partition CenteredClip + the
-    Alg. 6 broadcast tables, optionally warm-started from the previous
-    aggregate and/or run with the adaptive early-exit budget. The
-    verification tables are always computed exactly once against the final
-    iterate, so downstream accusation semantics never see the budget.
+    Verifiable specs — the ButterflyClip flagship (per-partition
+    CenteredClip + tau-clipped residual tables, optionally warm-started
+    and/or adaptive) and the ``verified:<base>`` wrappers over the
+    coordinatewise baselines (base aggregation + generalized contribution
+    digests, ``core.verification``) — run via
+    :func:`verification.spec_aggregate`. The tables/digests are always
+    computed exactly once against the final aggregate, so downstream
+    accusation semantics never see the iteration budget.
 
     Non-verifiable specs (mean, median, Krum, ...): the flat registry fn
     runs over the stacked gradients; there are no broadcast tables
@@ -345,22 +353,20 @@ def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
         return (agg, parts, None, None, None,
                 jnp.asarray(info.iters, jnp.int32))
 
-    p = spec.param_dict()
     z = bf.get_random_directions(seed, cfg.n_parts, cfg.part)
     v0 = None
-    if p["warm_start"]:
+    if spec.warm_startable and spec.get("warm_start", False):
         v0 = jnp.where(state.step > 0, state.prev_agg, 0.0)
     if cfg.aggregator_attack and cfg.aggregator_scale > 0:
         # tables must be computed against the (possibly corrupted) received
         # aggregate, so aggregation and tables split into two calls here
-        agg, parts, _s, _n, iters_used = bf.clip_aggregate(
-            G, p["tau"], p["n_iters"], adaptive_tol=p["adaptive_tol"],
-            weights=weights, use_pallas=cfg.use_pallas, v0=v0,
+        agg, parts, _s, _n, iters_used = verif_mod.spec_aggregate(
+            spec, G, z=None, weights=weights, v0=v0,
+            use_pallas=cfg.use_pallas,
         )
         return agg, parts, z, None, None, iters_used
-    agg, parts, s_tbl, norm_tbl, iters_used = bf.clip_aggregate(
-        G, p["tau"], p["n_iters"], z=z, adaptive_tol=p["adaptive_tol"],
-        weights=weights, use_pallas=cfg.use_pallas, v0=v0,
+    agg, parts, s_tbl, norm_tbl, iters_used = verif_mod.spec_aggregate(
+        spec, G, z=z, weights=weights, v0=v0, use_pallas=cfg.use_pallas,
     )
     return agg, parts, z, s_tbl, norm_tbl, iters_used
 
@@ -368,7 +374,9 @@ def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
 def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
     """Byzantine aggregators corrupt their partitions; every honest peer
     then reports tables against the corrupted value it received, and one
-    colluder cancels the Verification-2 checksum (App. C)."""
+    colluder cancels the Verification-2 checksum (App. C). The recomputed
+    tables are spec-aware: clipped residuals for butterfly_clip, plain
+    contribution digests for verified:* wrapped specs."""
     honest_agg = agg
     corrupt = jnp.zeros((cfg.n_parts,), bool)
     if cfg.aggregator_attack and cfg.aggregator_scale > 0:
@@ -377,8 +385,8 @@ def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
         agg = attacks_mod.aggregator_shift_all(
             agg, corrupt, _phase_key(state, 3), cfg.aggregator_scale
         )
-        s_tbl, norm_tbl = bf.verification_tables(
-            parts, agg, z, cfg.tau, use_pallas=cfg.use_pallas
+        s_tbl, norm_tbl = verif_mod.spec_tables(
+            cfg.agg_spec(), parts, agg, z, use_pallas=cfg.use_pallas
         )
     else:
         s_tbl = norm_tbl = None
@@ -401,8 +409,8 @@ def phase_misreport(cfg, s_tbl, corrupt, byz, active, weights):
     return s_tbl.at[liar].set(new_row)
 
 
-def phase_verify(cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
-                 norm_tbl, true_norm, byz, weights):
+def phase_verify(cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl,
+                 true_s, norm_tbl, true_norm, byz, weights):
     """Verifications 1-3 + validator spot checks -> accusation matrices."""
     n = cfg.n
     active_b = state.active > 0
@@ -417,10 +425,18 @@ def phase_verify(cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
     agg_ok = active_b & ~byz  # byzantine aggregators stay silent
     accuse = agg_ok[:, None] & (mismatch_norm | mismatch_s).T  # (j, i)
 
-    # V2b: global checksum per partition (system accusation on the owner)
-    cs_tol = bf.checksum_tolerance(agg, parts)
-    sums = (s_tbl * weights[:, None]).sum(0)
-    sys_accuse = jnp.abs(sums) > cs_tol
+    # V2b: global checksum per partition (system accusation on the owner).
+    # The zero-sum identity only holds when the digest combines LINEARLY
+    # into the aggregate (the CenteredClip fixed point / the weighted mean)
+    # — for nonlinear verified:* wrapped specs (median, trimmed mean) it is
+    # statically disabled, so honest runs stay accusation-free; a lying
+    # aggregator is caught by the validator partition recompute below.
+    if verif_mod.has_zero_checksum(cfg.agg_spec()):
+        cs_tol = bf.checksum_tolerance(agg, parts)
+        sums = (s_tbl * weights[:, None]).sum(0)
+        sys_accuse = jnp.abs(sums) > cs_tol
+    else:
+        sys_accuse = jnp.zeros((n,), bool)
     checksum_violations = sys_accuse.sum().astype(jnp.int32)
 
     # V3: Delta_max majority vote -> CHECKAVERAGING(j)
@@ -453,8 +469,14 @@ def phase_verify(cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
     grad_mismatch = jnp.any(G != honest_G, axis=1)  # commitment recompute
     row_tol = 1e-4 * (1.0 + jnp.abs(true_s).max(axis=1))
     s_row_mismatch = jnp.abs(s_tbl - true_s).max(axis=1) > row_tol
+    # CheckComputations covers the audited peer's FULL work: its gradient,
+    # its reported table row AND its partition aggregation (peer j owns
+    # partition j, Alg. 2) — the recompute that catches a lying aggregator
+    # even for wrapped specs whose checksum identity (V2b) does not exist.
+    agg_mismatch = jnp.any(agg != honest_agg, axis=1)  # (n_parts,) == (n,)
 
-    caught = grad_mismatch[target] | s_row_mismatch[target]
+    caught = (grad_mismatch[target] | s_row_mismatch[target]
+              | agg_mismatch[target])
     val_accuse = is_validator & ~byz & caught & valid_audit
     if cfg.false_accuse:
         val_accuse = val_accuse | (is_validator & byz & att & valid_audit)
@@ -569,7 +591,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         # ---- verify ------------------------------------------------------
         (accuse, sys_accuse, mismatch_s, cs_viol, chk_avg,
          last_checked) = phase_verify(
-            cfg, state, G, honest_G, agg, parts, s_tbl, true_s,
+            cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl, true_s,
             norm_tbl, true_norm, byz, weights,
         )
 

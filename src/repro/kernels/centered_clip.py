@@ -28,6 +28,19 @@ time per clip iteration — see DESIGN.md for the full derivation:
   tables standalone (used when the aggregate was corrupted after the fused
   call and the tables must be recomputed against the corrupted v).
 
+* ``_dg_batched_kernel`` / ``digest_tables_batched_pallas`` — the
+  GENERALIZED verification wrapper's contribution digests
+  s_i = <z, x_i - v>, ||x_i - v|| (no clip weight — wrapped coordinatewise
+  aggregators have no tau) in one pass of the stacked partitions; the
+  standalone table pass for verified:* specs whose aggregation is a jnp
+  sort (trimmed mean, coordinate median — nothing to fuse into).
+
+* ``_md_kernel`` / ``mean_digest_fused_pallas`` — verified:mean's fused
+  aggregation + digest epilogue: the weighted per-partition mean is a
+  single streaming reduction, so the digest tables ride the same
+  pallas_call (2 HBM passes of x total, zero materialized temporaries) —
+  the fused-epilogue treatment the ButterflyClip flagship already gets.
+
 Block geometry: peers stay un-tiled (n <= ~64 on the peer axis), the
 partition dim is tiled by ``block`` (lane-aligned multiples of 128). Inputs
 are zero-padded to a block multiple — zero columns where x == v == z == 0
@@ -722,6 +735,162 @@ def _vt_batched_kernel(
         cw = jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30))
         s_ref[0] = (cw * dot_ref[...]).reshape(s_ref.shape[1:])
         norm_ref[0] = norms.reshape(norm_ref.shape[1:])
+
+
+def _dg_batched_kernel(xs_ref, v_ref, z_ref, s_ref, norm_ref, dot_ref, sq_ref):
+    """Grid (n_parts, n_blocks) — generalized contribution digests for every
+    partition in one pallas_call: s_i = <z, x_i - v>, norm_i = ||x_i - v||.
+    Like _vt_batched_kernel minus the clip weight (wrapped coordinatewise
+    aggregators carry no tau). v/z/s/norm carry a singleton sublane dim for
+    legal native TPU tiles (see _bcc_kernel)."""
+    blk = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _reset():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    diff = xs_ref[0].astype(jnp.float32) - v_ref[0].astype(jnp.float32)
+    zb = z_ref[0].astype(jnp.float32)
+    dot_ref[...] += jnp.sum(diff * zb, axis=1, keepdims=True)
+    sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(blk == nb - 1)
+    def _epilogue():
+        s_ref[0] = dot_ref[...].reshape(s_ref.shape[1:])
+        norm_ref[0] = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0)).reshape(
+            norm_ref.shape[1:]
+        )
+
+
+def digest_tables_batched_pallas(
+    parts, agg, z, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """All-partition generalized digests in one pass of the stacked parts.
+
+    parts: (n_parts, n, part); agg, z: (n_parts, part).
+    Returns (s (n_parts, n), norms (n_parts, n)).
+    """
+    n_parts, n, d = parts.shape
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        agg = jnp.pad(agg, ((0, 0), (0, dp - d)))
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    s, norms = pl.pallas_call(
+        _dg_batched_kernel,
+        grid=(n_parts, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, n, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b: (p, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n), lambda p, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, b: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(parts, agg.reshape(n_parts, 1, dp), z.reshape(n_parts, 1, dp))
+    return s[:, 0], norms[:, 0]
+
+
+def _md_kernel(w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref, sq_ref):
+    """Grid (n_parts, 2, n_blocks) — fused weighted mean + digest epilogue.
+
+    Phase 0 writes the per-partition weighted mean block-locally (the mean
+    decomposes over lanes — no cross-block scratch needed); phase 1 streams
+    x once more against the finished aggregate accumulating the per-peer
+    digest dot and squared norm, emitting both tables on the last block.
+    2 HBM passes of x, zero materialized (n, d) temporaries."""
+    phase = pl.program_id(1)
+    blk = pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(phase == 0)
+    def _aggregate():
+        w = w_ref[...].astype(jnp.float32)
+        wsum = jnp.maximum(jnp.sum(w), 1e-30)
+        out_ref[0] = jnp.sum(
+            w * xs_ref[0].astype(jnp.float32), axis=0, keepdims=True
+        ) / wsum
+
+    @pl.when(phase == 1)
+    def _digest():
+        @pl.when(blk == 0)
+        def _reset():
+            dot_ref[...] = jnp.zeros_like(dot_ref)
+            sq_ref[...] = jnp.zeros_like(sq_ref)
+
+        diff = xs_ref[0].astype(jnp.float32) - out_ref[0]
+        dot_ref[...] += jnp.sum(
+            diff * z_ref[0].astype(jnp.float32), axis=1, keepdims=True
+        )
+        sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+        @pl.when(blk == nb - 1)
+        def _epilogue():
+            s_ref[0] = dot_ref[...].reshape(s_ref.shape[1:])
+            norm_ref[0] = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0)).reshape(
+                norm_ref.shape[1:]
+            )
+
+
+def mean_digest_fused_pallas(
+    parts, z, weights=None, *, block: int = DEFAULT_BLOCK, interpret: bool = True
+):
+    """verified:mean's fused aggregation + digest tables in one pallas_call.
+
+    parts: (n_parts, n, part); z: (n_parts, part); weights: (n,).
+    Returns (agg (n_parts, part), s (n_parts, n), norms (n_parts, n)).
+    """
+    n_parts, n, d = parts.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    agg, s, norms = pl.pallas_call(
+        _md_kernel,
+        grid=(n_parts, 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda p, ph, b: (0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, ph, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, ph, b: (p, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk), lambda p, ph, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, n), lambda p, ph, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, ph, b: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w2, parts, z.reshape(n_parts, 1, dp))
+    return agg[:, 0, :d], s[:, 0], norms[:, 0]
 
 
 def verify_tables_batched_pallas(

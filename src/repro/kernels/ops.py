@@ -134,3 +134,34 @@ def verify_tables_all_op(parts, agg, z, tau, *, block: int = _k.DEFAULT_BLOCK):
         parts, agg, z, tau, block=block, interpret=_INTERPRET
     )
     return s.T, norms.T
+
+
+# ---------------------------------------------------------------------------
+# Generalized verification-wrapper digests (core.verification): per-peer
+# contribution digests s_i = <z, x_i - v>, ||x_i - v|| — no clip weight,
+# because the wrapped coordinatewise aggregators carry no tau.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("block",))
+def digest_tables_all_op(parts, agg, z, *, block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed all-partition contribution digests (one pass of parts):
+    -> (s (n_peers, n_parts), norms (n_peers, n_parts)) — the standalone
+    digest pass for verified:* specs whose aggregation runs in jnp."""
+    s, norms = _k.digest_tables_batched_pallas(
+        parts, agg, z, block=block, interpret=_INTERPRET
+    )
+    return s.T, norms.T
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mean_digest_fused_op(parts, z, weights=None, *, block: int = _k.DEFAULT_BLOCK):
+    """verified:mean's fused aggregation + digest epilogue in ONE
+    pallas_call (2 HBM passes of the stacked partitions, zero materialized
+    temporaries): parts (n_parts, n_peers, part), z (n_parts, part) ->
+    (agg (n_parts, part), s (n_peers, n_parts), norms (n_peers, n_parts)).
+
+    s/norms come back transposed to the (peer, partition) layout of
+    core.verification.digest_tables."""
+    agg, s, norms = _k.mean_digest_fused_pallas(
+        parts, z, weights, block=block, interpret=_INTERPRET
+    )
+    return agg, s.T, norms.T

@@ -86,6 +86,34 @@ def adaptive_step_ref(xs, v, sq, tau, weights=None):
     return v + upd, jnp.sum(nd * nd, axis=1)
 
 
+def digest_tables_ref(xs, v, z):
+    """Reference generalized contribution digests (core.verification).
+
+    s_i = <z, x_i - v>;  norm_i = ||x_i - v|| — the verified:* wrapper's
+    tables: no clip weight, the wrapped coordinatewise aggregators carry no
+    tau. xs: (n, d); v, z: (d,). Returns (s (n,), norms (n,)) f32.
+    """
+    xs = xs.astype(jnp.float32)
+    diff = xs - v.astype(jnp.float32)[None, :]
+    return diff @ z.astype(jnp.float32), jnp.linalg.norm(diff, axis=1)
+
+
+def mean_digest_fused_ref(xs, z, weights=None):
+    """Reference for the fused verified:mean kernel: the weighted mean plus
+    the digest tables against it, evaluated with full-vector jnp ops (a
+    different accumulation order than the kernel's per-block sums).
+
+    xs: (n, d); z: (d,); weights: (n,).
+    Returns (v (d,), s (n,), norms (n,)) f32.
+    """
+    xs = xs.astype(jnp.float32)
+    n = xs.shape[0]
+    w = jnp.ones((n,), jnp.float32) if weights is None else weights.astype(jnp.float32)
+    v = (w[:, None] * xs).sum(0) / jnp.maximum(w.sum(), 1e-30)
+    s, norms = digest_tables_ref(xs, v, z)
+    return v, s, norms
+
+
 def verify_tables_ref(xs, v, z, tau):
     """Reference fused verification scalars.
 

@@ -9,13 +9,15 @@ Three step kinds per architecture:
                      stage 1 computes per-peer gradients (shard_map manual
                      over the peer axes = pod x data, auto over 'model');
                      stage 2 is the AggregatorSpec-dispatched robust
-                     all-reduce (fully-manual shard_map). The verifiable
-                     ButterflyClip spec runs the butterfly: all_to_all
-                     gradient partitions, CenteredClip per partition
-                     (optionally the Pallas kernel), the O(n^2)-scalar
-                     verification tables, all_gather back. Non-verifiable
-                     specs (mean, krum, ...) all_gather the stack and apply
-                     the registry fn (trusted-PS model, zero tables).
+                     all-reduce (fully-manual shard_map). Verifiable specs
+                     run the butterfly: all_to_all gradient partitions,
+                     per-partition aggregation by the owner (CenteredClip
+                     for the flagship, the base coordinatewise fn for
+                     verified:* wrapped specs; optionally Pallas kernels),
+                     the O(n^2)-scalar verification tables / contribution
+                     digests, all_gather back. Non-verifiable specs (mean,
+                     krum, ...) all_gather the stack and apply the registry
+                     fn (trusted-PS model, zero tables).
 * serve (prefill / decode) — auto-GSPMD with KV-cache shardings
                      (sequence-sharded for long_500k).
 """
@@ -164,11 +166,21 @@ def aggregation_stage(
     dispatched by :class:`~repro.core.aggregators.AggregatorSpec`. Returns
     (aggregated vector, verification dict).
 
-    Verifiable specs (ButterflyClip) run the paper's butterfly topology:
-    the local (model-shard) gradient vector is split into n_peers
-    partitions; partition j is robustly aggregated by peer j (all_to_all),
-    exactly Alg. 2 with partitions laid out over the TPU peer axis —
-    CenteredClip params (tau / n_iters / adaptive_tol) come from the spec.
+    Verifiable specs run the paper's butterfly topology: the local
+    (model-shard) gradient vector is split into n_peers partitions;
+    partition j is robustly aggregated by peer j (all_to_all), exactly
+    Alg. 2 with partitions laid out over the TPU peer axis. For the
+    ButterflyClip flagship the CenteredClip params (tau / n_iters /
+    adaptive_tol) come from the spec and the tables are the tau-clipped
+    residuals; for ``verified:<base>`` wrapped coordinatewise specs
+    (core.verification) the partition owner applies the BASE fn to its
+    all_to_all'd stack and broadcasts the generalized contribution digests
+    s_i = <z, x_i - v>, ||x_i - v|| instead — same O(n^2)-scalar table
+    traffic, same O(d)-per-peer gradient traffic as the flagship, where the
+    unwrapped baselines pay the O(n*d) PS all_gather below. The V2
+    checksum is emitted only for specs with the linear zero-sum identity
+    (butterfly_clip, verified:mean); nonlinear wrapped specs report 0 and
+    rely on validator recomputation (the host protocol's audit arm).
 
     Non-verifiable specs (mean, median, Krum, ...) have no partition
     ownership to verify: every peer all_gathers the full stack and applies
@@ -224,9 +236,8 @@ def aggregation_stage(
         }
         return flat.astype(jnp.float32), verif
 
-    p = spec.param_dict()
-    tau, clip_iters = p["tau"], p["n_iters"]
-    adaptive_tol = p["adaptive_tol"]
+    from repro.core import verification as verif_mod
+
     part = -(-d // n_peers)
     pad = part * n_peers - d
     if pad:
@@ -245,6 +256,25 @@ def aggregation_stage(
     my_idx = jax.lax.axis_index(peer_axes)
     z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), my_idx), (part,))
     z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
+
+    if verif_mod.is_wrapped(spec):
+        # wrapped coordinatewise spec: the partition owner runs the BASE fn
+        # over its all_to_all'd stack (exact — coordinatewise fns decompose
+        # over the partition split) and broadcasts the generalized digests;
+        # the fused-vs-standalone kernel dispatch lives in owner_aggregate.
+        agg, s_local, norms_local, iters_used = verif_mod.owner_aggregate(
+            spec, recv, z, weights, use_pallas=use_pallas,
+            key=jax.random.key(seed),
+        )
+        return _emit_tables(
+            g_vec, d, pad, agg, s_local, norms_local, iters_used, weights,
+            peer_axes, delta_max,
+            with_checksum=verif_mod.has_zero_checksum(spec),
+        )
+
+    p = spec.param_dict()
+    tau, clip_iters = p["tau"], p["n_iters"]
+    adaptive_tol = p["adaptive_tol"]
 
     v0 = None
     if v0_full is not None:
@@ -290,7 +320,24 @@ def aggregation_stage(
         s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
         norms_local = jnp.linalg.norm(recv.astype(jnp.float32) - agg[None], axis=1)
 
-    checksum = jnp.abs((s_local * weights).sum())
+    return _emit_tables(
+        g_vec, d, pad, agg, s_local, norms_local, iters_used, weights,
+        peer_axes, delta_max, with_checksum=True,
+    )
+
+
+def _emit_tables(g_vec, d, pad, agg, s_local, norms_local, iters_used,
+                 weights, peer_axes, delta_max, with_checksum=True):
+    """Shared table-broadcast tail of the verifiable butterfly paths:
+    checksum/Delta_max votes from the owner's local tables, the O(n^2)
+    scalar table all_gathers, and the aggregated-partition all_gather.
+    ``with_checksum=False`` (nonlinear verified:* specs — no zero-sum
+    identity) reports a zero checksum so the launch-side ban policy never
+    fires on honest finite-precision residue."""
+    if with_checksum:
+        checksum = jnp.abs((s_local * weights).sum())
+    else:
+        checksum = jnp.zeros(())
     votes = ((norms_local > delta_max) * weights).sum() if delta_max is not None else jnp.zeros(())
     # broadcast the scalar tables (O(n^2) data total — size-independent)
     s_table = jax.lax.all_gather(s_local, peer_axes)  # (n_parts, n_peers)

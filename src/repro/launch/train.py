@@ -97,8 +97,15 @@ def main():
                          "n_iters, warm_start, adaptive_tol), mean, "
                          "coordinate_median, trimmed_mean[:trim_ratio=R], "
                          "geometric_median, krum[:n_byzantine=B], "
-                         "centered_clip[:tau=T]. Non-verifiable specs run "
-                         "without the verification/ban machinery. --tau and "
+                         "centered_clip[:tau=T]. verified:BASE[:k=v,...] "
+                         "lifts a coordinatewise baseline (mean, "
+                         "trimmed_mean, coordinate_median) into a "
+                         "verifiable one: butterfly all_to_all topology + "
+                         "recomputable contribution digests instead of the "
+                         "O(n*d) PS all_gather (e.g. "
+                         "verified:trimmed_mean:trim_ratio=0.2). "
+                         "Non-verifiable specs run without the "
+                         "verification/ban machinery. --tau and "
                          "--clip-iters fill the spec's defaults; explicit "
                          "spec params win.")
     ap.add_argument("--warm-start-clip", action="store_true",

@@ -40,10 +40,12 @@ def test_registry_covers_all_paper_baselines():
     names = set(registered_aggregators())
     assert {"mean", "coordinate_median", "trimmed_mean", "geometric_median",
             "krum", "centered_clip", "butterfly_clip"} <= names
-    # exactly one verifiable flagship
-    assert [n for n in names if AggregatorSpec(n).verifiable] == [
-        "butterfly_clip"
-    ]
+    # the verifiable set: the flagship plus exactly one verified:<base>
+    # wrapper per coordinatewise baseline (core.verification)
+    assert {n for n in names if AggregatorSpec(n).verifiable} == {
+        "butterfly_clip", "verified:mean", "verified:trimmed_mean",
+        "verified:coordinate_median",
+    }
 
 
 def test_spec_parse_and_canonical_roundtrip():
