@@ -16,7 +16,9 @@ Four views:
     exactly the paper's §3.1 cost accounting), now PER AGGREGATOR SPEC:
     verifiable specs (the flagship and every verified:* wrapper) ride the
     butterfly at O(d) per peer plus size-independent table bytes, while the
-    unwrapped baselines pay the trusted-PS O(n*d) all_gather;
+    unwrapped baselines pay the trusted-PS O(n*d) all_gather; compressed:*
+    specs carry per-codec ``bytes_on_wire`` / ``wire_reduction_x`` columns
+    (int8 ~4x fewer all_to_all bytes; regression-gated);
   * the scan-engine view: steps/s of the legacy host protocol loop vs the
     jitted lax.scan ProtocolState engine (core.engine), at the default
     clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json.
@@ -47,10 +49,19 @@ JSON_PATH = os.path.join(_DIR, "BENCH_overhead.json")
 SCAN_JSON_PATH = os.path.join(_DIR, "BENCH_scan.json")
 
 
-def comm_model(n, d, bytes_per=4):
+def comm_model(n, d, bytes_per=4, payload_bytes=None, sidecar_bytes=0):
+    """AR vs BTARD per-peer bytes, parameterized by the gradient payload
+    dtype: ``payload_bytes`` is the bytes/coordinate on the butterfly
+    all_to_all leg (defaults to ``bytes_per``, the f32 baseline; compressed
+    specs ship 1-2), ``sidecar_bytes`` the codec sidecar traffic (one f32
+    scale per payload each way). Returns (ar, btard_extra, bytes_on_wire)
+    where bytes_on_wire is the all_to_all payload leg — the bytes a wire
+    codec actually compresses."""
+    pb = bytes_per if payload_bytes is None else payload_bytes
     ar = 2 * d * bytes_per  # reduce-scatter + all-gather per peer
     btard_extra = (2 * n * n + 3 * n) * bytes_per  # s-table, norms, hashes, mprng
-    return ar, btard_extra
+    bytes_on_wire = d * pb + sidecar_bytes
+    return ar, btard_extra, bytes_on_wire
 
 
 def comm_model_per_spec(n, d, bytes_per=4):
@@ -61,6 +72,12 @@ def comm_model_per_spec(n, d, bytes_per=4):
       butterfly — all_to_all its d/n-sized partition to every peer (~d
       sent) + the aggregated-partition all_gather (~d received) + the
       O(n^2)-scalar broadcast tables, independent of d;
+    * compressed:* specs additionally quantize the all_to_all payload to
+      their wire codec (int8: 1 byte/coordinate + one f32 scale sidecar
+      per payload each way; bf16: 2 bytes) — ``bytes_on_wire`` is that
+      compressed leg and ``wire_reduction_x`` its reduction vs the f32
+      butterfly payload (the regression-gated codec claim); the aggregate
+      all_gather rides the transport dtype, codec-independent;
     * non-verifiable specs all_gather the FULL peer stack (the trusted-PS
       model): n*d received per peer, zero tables.
 
@@ -68,26 +85,55 @@ def comm_model_per_spec(n, d, bytes_per=4):
     registry: wrapping a baseline into its verified: form REPLACES the
     O(n*d) PS gather with the O(d)-per-peer butterfly plus size-independent
     table traffic — verification makes the communication model BETTER, not
-    worse, for n > 2.
+    worse, for n > 2 — and the compressed: wrapper then shrinks the
+    dominant butterfly leg by ~4x (int8) on top.
     """
-    from repro.core.aggregators import REGISTRY
+    from repro.core import compression as comp
+    from repro.core.aggregators import REGISTRY, AggregatorSpec
 
     out = {}
-    for name, defn in sorted(REGISTRY.items()):
+
+    def cell(defn, payload_bytes, sidecar):
         if defn.verifiable:
             table = (2 * n * n + 3 * n) * bytes_per
-            per_peer = 2 * d * bytes_per + table
+            _, _, wire = comm_model(
+                n, d, bytes_per, payload_bytes, sidecar
+            )
+            # + the aggregated-partition all_gather (transport dtype)
+            per_peer = wire + d * bytes_per + table
             topology = "butterfly"
         else:
             table = 0
-            per_peer = (n + 1) * d * bytes_per  # send d, gather the n*d stack
+            wire = (n + 1) * d * bytes_per  # send d, gather the n*d stack
+            per_peer = wire
             topology = "ps_all_gather"
-        out[name] = {
+        return {
             "topology": topology,
+            "payload_bytes_per_coord": payload_bytes,
+            "sidecar_bytes": sidecar,
+            "bytes_on_wire": wire,
             "per_peer_bytes": per_peer,
             "table_bytes": table,
             "per_peer_over_ar": per_peer / (2 * d * bytes_per),
+            # the codec claim: f32 all_to_all leg / this spec's leg
+            "wire_reduction_x": (d * bytes_per) / wire
+            if topology == "butterfly" else 1.0,
         }
+
+    for name, defn in sorted(REGISTRY.items()):
+        if name.startswith(comp.PREFIX):
+            codec = comp.codec_of(AggregatorSpec(name))  # declared default
+            out[name] = cell(
+                defn, comp.CODEC_BYTES[codec], 2 * n * bytes_per
+            )
+            # the non-default codec variant, same spec machinery
+            for alt in comp.CODECS:
+                if alt != codec:
+                    out[f"{name}:codec={alt}"] = cell(
+                        defn, comp.CODEC_BYTES[alt], 2 * n * bytes_per
+                    )
+        else:
+            out[name] = cell(defn, bytes_per, 0)
     return out
 
 
@@ -334,7 +380,7 @@ def main(fast=True, out_dir=None):
 
             us_fused = timer(jax.jit(fused_btard), g, reps=3)
 
-        ar, extra = comm_model(n, d)
+        ar, extra, _ = comm_model(n, d)
         passes = hbm_pass_model(n_iters, n, d)
         emit(
             f"overhead/d={d}",
@@ -368,7 +414,9 @@ def main(fast=True, out_dir=None):
             f"overhead/comm/{spec_name}",
             cell["per_peer_bytes"] / 1e3,
             f"topology={cell['topology']};table_bytes={cell['table_bytes']};"
-            f"per_peer_over_ar={cell['per_peer_over_ar']:.2f}",
+            f"per_peer_over_ar={cell['per_peer_over_ar']:.2f};"
+            f"bytes_on_wire={cell['bytes_on_wire']};"
+            f"wire_reduction={cell['wire_reduction_x']:.2f}x",
         )
     payload = {
         "bench": "overhead",

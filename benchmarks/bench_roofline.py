@@ -9,6 +9,13 @@ plus MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference)
 and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
 
 FLOPs/bytes use the scan-corrected values when the probe succeeded.
+
+Also emits the WIRE-CODEC roofline for the compressed butterfly all-reduce
+(:func:`codec_roofline`, analytic — no artifacts needed): per codec and per
+gradient dim, the comm / compute / HBM time terms of one robust aggregation
+round, the dim above which the payload (not the O(n^2) tables + scale
+sidecars) dominates the wire, and the clip budget at which the round turns
+compute-bound (where a faster codec stops paying).
 """
 import glob
 import json
@@ -21,6 +28,83 @@ HBM_BW = 819e9  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 
 from benchmarks.common import emit
+
+# flops per coordinate per clip iteration (fused kernel: diff, norm-sq
+# accumulate, clip-weighted update, incremental-norm recurrence — DESIGN.md)
+CLIP_FLOPS_PER_COORD = 8.0
+
+
+def codec_roofline(n=16, n_iters=20, dims=None, bytes_per=4):
+    """Bandwidth roofline of ONE compressed robust all-reduce per codec.
+
+    Per (codec, d) the three per-peer time terms:
+
+      comm    = bytes_on_wire / ICI_BW  — the all_to_all payload leg
+                (d * codec_bytes + 2n f32 sidecar scales + the O(n^2)
+                broadcast tables; the aggregate all_gather rides the
+                transport dtype and cancels across codecs)
+      compute = n_iters * d * CLIP_FLOPS_PER_COORD / PEAK_FLOPS — the
+                owner-side CenteredClip work across all partitions
+      hbm     = (n_iters + 2) * d * codec_bytes / HBM_BW — the fused
+                dequant kernel streams WIRE bytes (kernels/DESIGN.md), so
+                the codec compresses memory traffic too
+
+    and two crossovers:
+
+      payload_dominant_d — the dim above which d * codec_bytes exceeds the
+          size-independent wire terms (tables + sidecars); below it the
+          codec cannot help because the wire is table-bound;
+      compute_bound_iters — the clip budget at which compute time reaches
+          this codec's comm time at dim d (above it the round is
+          compute-bound and further wire compression stops paying).
+
+    Returns {codec: [per-dim records]}; every record is emitted for the
+    perf trajectory. Pure model — mirror of bench_overhead.comm_model — so
+    it runs identically on any host.
+    """
+    from repro.core.compression import CODEC_BYTES
+
+    if dims is None:
+        dims = [1 << 14, 1 << 17, 1 << 20, 1 << 23, 1 << 26]
+    table_b = (2 * n * n + 3 * n) * bytes_per
+    out = {}
+    for codec, cb in dict(CODEC_BYTES, f32=bytes_per).items():
+        sidecar_b = 0 if codec == "f32" else 2 * n * bytes_per
+        fixed_b = table_b + sidecar_b
+        rows = []
+        for d in dims:
+            wire_b = d * cb + fixed_b
+            t_comm = wire_b / ICI_BW
+            t_compute = n_iters * d * CLIP_FLOPS_PER_COORD / PEAK_FLOPS
+            t_hbm = (n_iters + 2) * d * cb / HBM_BW
+            terms = {"comm": t_comm, "compute": t_compute, "hbm": t_hbm}
+            rows.append({
+                "d": d,
+                "bytes_on_wire": wire_b,
+                "t_comm_s": t_comm,
+                "t_compute_s": t_compute,
+                "t_hbm_s": t_hbm,
+                "dominant": max(terms, key=terms.get),
+                "wire_reduction_x": (d * bytes_per + table_b) / wire_b,
+                "compute_bound_iters": (wire_b / ICI_BW) * PEAK_FLOPS
+                / (d * CLIP_FLOPS_PER_COORD),
+            })
+        out[codec] = {
+            # d * cb = fixed_b — payload overtakes the size-independent wire
+            "payload_dominant_d": fixed_b / cb,
+            "dims": rows,
+        }
+        for r in rows:
+            emit(
+                f"roofline/codec/{codec}/d={r['d']}",
+                1e6 * r["t_comm_s"],
+                f"compute_us={1e6 * r['t_compute_s']:.2f};"
+                f"hbm_us={1e6 * r['t_hbm_s']:.2f};"
+                f"dominant={r['dominant']};"
+                f"wire_reduction={r['wire_reduction_x']:.2f}x;"
+                f"compute_bound_iters={r['compute_bound_iters']:.0f}",
+            )
+    return out
 
 
 def analyze_record(rec):
@@ -54,6 +138,15 @@ def analyze_record(rec):
 
 
 def main(fast=True, out_dir="results/dryrun"):
+    codecs = codec_roofline()
+    print("# codec,payload_dominant_d,largest_dim_dominant,wire_reduction_x")
+    for codec, block in codecs.items():
+        last = block["dims"][-1]
+        print(
+            f"{codec},{block['payload_dominant_d']:.0f},{last['dominant']},"
+            f"{last['wire_reduction_x']:.2f}",
+            flush=True,
+        )
     files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
     if not files:
         emit("roofline/no_dryrun_artifacts", 0.0, "run launch.dryrun first")

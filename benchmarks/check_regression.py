@@ -19,7 +19,8 @@ Compares freshly generated BENCH_*.json (``bench_overhead.py --quick
   verified:* wrapped baselines must keep banning (and match the committed
   count), non-verifiable ones must never ban; the per-spec communication
   model (butterfly vs PS all_gather topology, table bytes) is analytic and
-  gated exactly.
+  gated exactly, including the compressed:* wire-codec columns (the int8
+  all_to_all leg must stay >= 3.5x smaller than the f32 payload).
 * absolute steps/s — fresh >= baseline * (1 - tol). The band is wide
   (default 0.6) because hosted runners are noisy and slower than the dev
   machine; the ratio invariants above are the sharp gate.
@@ -46,10 +47,24 @@ CELLS = ("legacy_loop", "scan_engine", "scan_engine_warm15",
 # every registered AggregatorSpec must appear in the BENCH_scan.json
 # aggregator_comparison block (keep in sync with
 # repro.core.aggregators.registered_aggregators())
-AGG_NAMES = ("butterfly_clip", "centered_clip", "coordinate_median",
-             "geometric_median", "krum", "mean", "trimmed_mean",
-             "verified:coordinate_median", "verified:mean",
+AGG_NAMES = ("butterfly_clip", "centered_clip",
+             "compressed:butterfly_clip",
+             "compressed:verified:coordinate_median",
+             "compressed:verified:mean",
+             "compressed:verified:trimmed_mean",
+             "coordinate_median", "geometric_median", "krum", "mean",
+             "trimmed_mean", "verified:coordinate_median", "verified:mean",
              "verified:trimmed_mean")
+
+# wire-codec acceptance floors: the compressed:* all_to_all leg must shrink
+# by at least this factor vs the f32 butterfly payload (the comm model is
+# analytic — int8 is ~3.999x at the bench dim, so 3.5 is pure safety margin)
+MIN_WIRE_X = {1: 3.5, 2: 1.75}
+
+
+def _is_verifiable_name(name):
+    return (name == "butterfly_clip" or name.startswith("verified:")
+            or name.startswith("compressed:"))
 
 
 def _load(path):
@@ -100,7 +115,7 @@ def check_overhead(fresh, base, errors):
         if cell is None:
             errors.append(f"comm_per_spec missing spec: {name}")
             continue
-        verifiable = name == "butterfly_clip" or name.startswith("verified:")
+        verifiable = _is_verifiable_name(name)
         want_topo = "butterfly" if verifiable else "ps_all_gather"
         if cell.get("topology") != want_topo:
             errors.append(
@@ -113,6 +128,26 @@ def check_overhead(fresh, base, errors):
                 f"{cell.get('table_bytes')} inconsistent with "
                 f"verifiable={verifiable}"
             )
+        if name.startswith("compressed:"):
+            pb = cell.get("payload_bytes_per_coord")
+            floor = MIN_WIRE_X.get(pb)
+            if floor is None:
+                errors.append(
+                    f"comm_per_spec[{name}]: unexpected payload width "
+                    f"{pb} bytes/coord (codec model drift)"
+                )
+            elif cell.get("wire_reduction_x", 0.0) < floor:
+                errors.append(
+                    f"comm_per_spec[{name}]: wire reduction "
+                    f"{cell.get('wire_reduction_x', 0.0):.2f}x < floor "
+                    f"{floor}x for a {pb}-byte codec (bytes_on_wire="
+                    f"{cell.get('bytes_on_wire')} — sidecar/payload model "
+                    "drift)"
+                )
+            if not cell.get("bytes_on_wire", 0) > 0:
+                errors.append(
+                    f"comm_per_spec[{name}] missing bytes_on_wire column"
+                )
 
 
 def check_scan(fresh, base, tol, errors):

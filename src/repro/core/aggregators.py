@@ -325,10 +325,17 @@ class AggregatorSpec:
         ``verified:BASE[:k=v,...]`` parses the base spec and lifts it via
         the :func:`verified` combinator, so the wrapped registry names
         (``verified:mean``, ``verified:trimmed_mean``, ...) round-trip
-        through ``canonical()`` like any other spec."""
+        through ``canonical()`` like any other spec.
+        ``compressed:INNER[:k=v,...]`` likewise lifts via :func:`compressed`
+        (``codec=int8|bf16`` binds to the wrapper, every other param to the
+        inner spec — ``core.compression``)."""
         text = text.strip()
         if text.startswith("verified:"):
             return verified(cls.parse(text[len("verified:"):]))
+        if text.startswith("compressed:"):
+            from repro.core import compression as _compression
+
+            return _compression.parse_spec_text(text[len("compressed:"):])
         name, _, tail = text.partition(":")
         name = name.strip()
         spec = cls(name)
@@ -382,6 +389,21 @@ def verified(spec) -> AggregatorSpec:
     from repro.core import verification as _verification
 
     return _verification.verified(spec)
+
+
+def compressed(spec, codec: str | None = None) -> AggregatorSpec:
+    """Registry combinator: wire-compress a verifiable spec's butterfly
+    all-to-all payloads (``codec='int8'`` — per-partition symmetric scale,
+    one f32 sidecar scalar, ≈4× fewer wire bytes — or ``'bf16'``). All
+    Alg. 6 digests are computed over the dequantized-from-wire values, so
+    verification stays exact (zero honest accusations is structural).
+    Non-verifiable coordinatewise specs are lifted through ``verified:``
+    first; full-vector specs raise. Implementation:
+    :mod:`repro.core.compression`.
+    """
+    from repro.core import compression as _compression
+
+    return _compression.compressed(spec, codec=codec)
 
 
 def with_byzantine_default(spec: AggregatorSpec,

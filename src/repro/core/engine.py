@@ -51,6 +51,7 @@ import jax.numpy as jnp
 from repro.core import aggregators as agg_mod
 from repro.core import attacks as attacks_mod
 from repro.core import butterfly as bf
+from repro.core import compression as comp_mod
 from repro.core import verification as verif_mod
 
 # Ban reason codes (StepOutputs.ban_reason_now / ProtocolState.ban_reason)
@@ -580,6 +581,21 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         cfg, state, G, weights, seed
     )
     if spec.verifiable:
+        # compressed:* specs: every peer commits to (and validators
+        # recompute) the WIRE payload, not the raw f32 gradient — so the
+        # commitment comparisons in verify/accuse must run over the wire
+        # projection of both sides. A perturbation below the quantization
+        # step neither enters the aggregate nor trips a ban (the wire
+        # representation IS the protocol-visible contribution); anything
+        # that survives quantization differs on the wire and is caught
+        # exactly as before. Honest rows are raw-equal, hence wire-equal:
+        # zero honest accusations is structural, not a tolerance.
+        if comp_mod.is_wrapped(spec):
+            codec = comp_mod.codec_of(spec)
+            G_cmp = comp_mod.wire_grads(G, codec, cfg.n_parts)
+            honest_G_cmp = comp_mod.wire_grads(honest_G, codec, cfg.n_parts)
+        else:
+            G_cmp, honest_G_cmp = G, honest_G
         agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
             cfg, state, agg, parts, z, byz, weights
         )
@@ -591,15 +607,16 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         # ---- verify ------------------------------------------------------
         (accuse, sys_accuse, mismatch_s, cs_viol, chk_avg,
          last_checked) = phase_verify(
-            cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl, true_s,
-            norm_tbl, true_norm, byz, weights,
+            cfg, state, G_cmp, honest_G_cmp, agg, honest_agg, parts, s_tbl,
+            true_s, norm_tbl, true_norm, byz, weights,
         )
 
         # ---- accuse / ban ------------------------------------------------
         (new_active, banned_now, reason, cheated,
          accused_inc) = phase_accuse_ban(
             cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
-            G, honest_G, agg, honest_agg, s_tbl, true_s, norm_tbl, true_norm,
+            G_cmp, honest_G_cmp, agg, honest_agg, s_tbl, true_s, norm_tbl,
+            true_norm,
         )
     else:
         # non-verifiable aggregator: no tables -> no verification, no

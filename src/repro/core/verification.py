@@ -125,8 +125,17 @@ def has_zero_checksum(spec) -> bool:
     nonlinear wrapped specs the engine statically disables V2 — an honest
     run must produce ZERO accusations, and their aggregator-side detection
     arm is the validator audit's partition recompute instead.
+
+    ``compressed:*`` specs answer for their INNER spec: every digest (and
+    the aggregate itself) is computed over the dequantized-from-wire
+    values, so the linearity argument is unchanged — it just runs over the
+    wire representation (core.compression).
     """
     spec = agg_mod.resolve_spec(spec)
+    if spec.name.startswith("compressed:"):
+        from repro.core import compression as _compression
+
+        spec = _compression.inner_spec(spec)
     return spec.name in ("butterfly_clip", PREFIX + "mean")
 
 
@@ -163,8 +172,20 @@ def spec_tables(spec, parts, agg, z, use_pallas: bool = False):
 
     butterfly_clip -> tau-clipped residual tables; verified:* -> the plain
     digests. Raises for non-verifiable specs (no tables exist).
+
+    compressed:* -> the INNER spec's tables over the given parts, which
+    must already be the dequantized-from-wire payloads (exactly what
+    ``spec_aggregate`` returns for a compressed spec) — tables are always
+    digests over the wire representation, never the raw gradients.
     """
     spec = agg_mod.resolve_spec(spec)
+    if spec.name.startswith("compressed:"):
+        from repro.core import compression as _compression
+
+        return spec_tables(
+            _compression.inner_spec(spec), parts, agg, z,
+            use_pallas=use_pallas,
+        )
     if spec.name == "butterfly_clip":
         return bf.verification_tables(
             parts, agg, z, spec.get("tau", 1.0), use_pallas=use_pallas
@@ -202,6 +223,15 @@ def spec_aggregate(spec, grads, z=None, weights=None, v0=None,
     """
     spec = agg_mod.resolve_spec(spec)
     n, d = grads.shape
+    if spec.name.startswith("compressed:"):
+        # quantize the butterfly payloads, then run the inner spec over the
+        # dequantized-from-wire values (core.compression) — returned parts
+        # are the wire values every downstream digest/table sees
+        from repro.core import compression as _compression
+
+        return _compression.compressed_aggregate(
+            spec, grads, z=z, weights=weights, v0=v0, use_pallas=use_pallas,
+        )
     if spec.name == "butterfly_clip":
         p = spec.param_dict()
         if not p.get("warm_start"):
@@ -239,7 +269,7 @@ def spec_aggregate(spec, grads, z=None, weights=None, v0=None,
 
 
 def owner_aggregate(spec, stack, z, weights=None, use_pallas: bool = False,
-                    key=None):
+                    key=None, wire=None):
     """ONE partition owner's work on the distributed path: aggregate the
     all_to_all'd (n, part) stack with the BASE fn and digest against the
     result — the single-partition sibling of :func:`spec_aggregate`'s
@@ -247,13 +277,38 @@ def owner_aggregate(spec, stack, z, weights=None, use_pallas: bool = False,
     only here (launch.steps.aggregation_stage calls this).
 
     Returns (agg (part,), s (n,), norms (n,), iters () i32).
+
+    For compressed:* specs ``stack`` must already be the dequantized-from-
+    wire payloads (the launch stage dequantizes right after the all_to_all
+    — launch.steps), so the owner's aggregation and digests run over the
+    wire representation and match every validator's recompute bitwise.
+    ``wire`` optionally carries the received wire payloads themselves as
+    ``(qs (n, part) int8/bf16, scales (n,) f32)``; with ``use_pallas`` the
+    mean path then reads the 1-2 byte wire dtype straight from HBM through
+    the fused dequantize+mean+digest kernel instead of the materialized f32
+    ``stack`` (identical values — one dequantize formula everywhere).
     """
     spec = agg_mod.resolve_spec(spec)
+    if spec.name.startswith("compressed:"):
+        from repro.core import compression as _compression
+
+        return owner_aggregate(
+            _compression.inner_spec(spec), stack, z, weights=weights,
+            use_pallas=use_pallas, key=key, wire=wire,
+        )
     base = base_spec(spec)
     n, part = stack.shape
     stack = stack.astype(jnp.float32)
     z = z.astype(jnp.float32)
     if use_pallas and base.name == "mean":
+        if wire is not None:
+            from repro.kernels.ops import mean_digest_fused_dequant_op
+
+            qs, scales = wire
+            agg_b, s_b, n_b = mean_digest_fused_dequant_op(
+                qs[None], scales[None], z[None], weights
+            )
+            return agg_b[0], s_b[:, 0], n_b[:, 0], jnp.asarray(1, jnp.int32)
         from repro.kernels.ops import mean_digest_fused_op
 
         agg_b, s_b, n_b = mean_digest_fused_op(stack[None], z[None], weights)
@@ -298,3 +353,10 @@ def register_verified_wrappers():
 
 
 register_verified_wrappers()
+
+# the compressed:<verifiable> wire-codec wrappers register themselves on
+# import (core.compression.register_compressed_wrappers). The import lives
+# HERE, after register_verified_wrappers(), so the compressed: loop always
+# sees the verified:* wrappers whichever of the three modules is imported
+# first.
+import repro.core.compression  # noqa: E402,F401  (registration side effect)

@@ -41,6 +41,15 @@ time per clip iteration — see DESIGN.md for the full derivation:
   pallas_call (2 HBM passes of x total, zero materialized temporaries) —
   the fused-epilogue treatment the ButterflyClip flagship already gets.
 
+* dequant variants (``butterfly_clip_fused_dequant_pallas``,
+  ``mean_digest_fused_dequant_pallas``) — the same fused bodies over WIRE
+  payloads (core.compression): xs stays int8/bf16 in HBM for every pass
+  and is dequantized in-register against a per-(partition, peer) f32
+  sidecar scale, so ``compressed:*`` specs keep the n_iters + 2 (resp. 2)
+  pass structure over 1-2 byte data — ≈4× (int8) fewer HBM bytes per pass.
+  All arithmetic runs on the dequantized f32 values (the same bits the jnp
+  path computes), which is what keeps compressed verification exact.
+
 Block geometry: peers stay un-tiled (n <= ~64 on the peer axis), the
 partition dim is tiled by ``block`` (lane-aligned multiples of 128). Inputs
 are zero-padded to a block multiple — zero columns where x == v == z == 0
@@ -266,17 +275,26 @@ def butterfly_clip_pallas(
 # ===========================================================================
 def _fused_body(
     batched, taus_ref, tauv_ref, w_ref, xs_ref, v_ref, z_ref,
-    out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref,
+    out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref, *, scales_ref=None,
 ):
     """taus/tauv live in SMEM (whole schedule, indexed by the pass id); in
     the batched variant v/z/out/s/norm carry a singleton sublane dim (see
-    _bcc_kernel) so every VMEM block satisfies the TPU tiling rules."""
+    _bcc_kernel) so every VMEM block satisfies the TPU tiling rules.
+
+    scales_ref (dequant variant): per-peer f32 sidecar scales — xs arrives
+    in its WIRE dtype (int8 / bf16) and is dequantized in-register
+    (``xs.astype(f32) * scale``, the exact formula of
+    core.compression.dequantize), so every clip iteration and the digest
+    epilogue stream 1-2 byte data through HBM while all arithmetic sees the
+    same f32 wire values as the jnp path — bit-identical digests."""
     off = 1 if batched else 0
     it = pl.program_id(off + 0)
     blk = pl.program_id(off + 1)
     n_upd = pl.num_programs(off + 0) - 2
     nb = pl.num_programs(off + 1)
     xs = (xs_ref[0] if batched else xs_ref[...]).astype(jnp.float32)
+    if scales_ref is not None:  # in-register dequantize of the wire payload
+        xs = xs * (scales_ref[0] if batched else scales_ref[...])
     # 2D (1, blk) views of the possibly 3D-blocked refs
     vget = (lambda r: r[0]) if batched else (lambda r: r[...])
 
@@ -338,6 +356,19 @@ def _fused_body(
             else:
                 s_ref[...] = s.reshape(s_ref.shape)
                 norm_ref[...] = norms.reshape(norm_ref.shape)
+
+
+def _fused_dequant_body(
+    batched, taus_ref, tauv_ref, w_ref, scales_ref, xs_ref, v_ref, z_ref,
+    out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref,
+):
+    """Positional-ref adapter for the dequant variant: the sidecar scales
+    ride as one extra VMEM operand between w and the wire-dtype xs."""
+    _fused_body(
+        batched, taus_ref, tauv_ref, w_ref, xs_ref, v_ref, z_ref,
+        out_ref, s_ref, norm_ref, sq_ref, cw_ref, dot_ref,
+        scales_ref=scales_ref,
+    )
 
 
 def _pad_taus(taus, n_iters):
@@ -474,6 +505,83 @@ def butterfly_clip_fused_pallas(
         ],
         interpret=interpret,
     )(_pad_taus(taus, n_iters), tauv2, w2, parts, v0,
+      z.reshape(n_parts, 1, dp))
+    return out[:, 0, :d], s[:, 0], norms[:, 0]
+
+
+def butterfly_clip_fused_dequant_pallas(
+    qs, scales, taus, z, tau_v=None, weights=None, v0=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """The fused ButterflyClip aggregation + tables over WIRE payloads: qs
+    stays int8/bf16 in HBM for all n_iters + 2 passes and is dequantized
+    in-register against the per-(partition, peer) sidecar scales — the
+    ``compressed:butterfly_clip`` hot path (≈4× fewer HBM bytes per pass
+    for int8).
+
+    qs: (n_parts, n_peers, part) wire dtype; scales: (n_parts, n_peers)
+    f32 (ship 1s for bf16); z: (n_parts, part); v0: optional (n_parts,
+    part) f32 warm start (a broadcast value, not a wire payload).
+    Returns (agg (n_parts, part), s (n_parts, n), norms (n_parts, n)) f32.
+
+    Tiling: the qs block (1, n, blk) keeps the full peer axis, so the
+    sublane dim equals the array dim and the wire dtype's tighter native
+    tile minima are satisfied; scales use the (n_parts, n, 1) singleton-
+    lane layout of the adaptive step kernel's sq operand (DESIGN.md).
+    """
+    n_parts, n, d = qs.shape
+    n_iters = int(taus.shape[0])
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if tau_v is None:
+        tau_v = taus[-1]
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        qs = jnp.pad(qs, ((0, 0), (0, 0), (0, dp - d)))  # wire zeros: exact
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+        if v0 is not None:
+            v0 = jnp.pad(v0, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    tauv2 = jnp.asarray(tau_v, jnp.float32).reshape(1, 1)
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    sc3 = scales.reshape(n_parts, n, 1).astype(jnp.float32)
+    v0 = (
+        jnp.zeros((n_parts, 1, dp), jnp.float32)
+        if v0 is None
+        else v0.astype(jnp.float32).reshape(n_parts, 1, dp)
+    )
+
+    out, s, norms = pl.pallas_call(
+        functools.partial(_fused_dequant_body, True),
+        grid=(n_parts, n_iters + 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((n, 1), lambda p, i, b: (0, 0)),
+            pl.BlockSpec((1, n, 1), lambda p, i, b: (p, 0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk), lambda p, i, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, n), lambda p, i, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, i, b: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(_pad_taus(taus, n_iters), tauv2, w2, sc3, qs, v0,
       z.reshape(n_parts, 1, dp))
     return out[:, 0, :d], s[:, 0], norms[:, 0]
 
@@ -806,25 +914,32 @@ def digest_tables_batched_pallas(
     return s[:, 0], norms[:, 0]
 
 
-def _md_kernel(w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref, sq_ref):
+def _md_kernel(w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref,
+               sq_ref, *, scales_ref=None):
     """Grid (n_parts, 2, n_blocks) — fused weighted mean + digest epilogue.
 
     Phase 0 writes the per-partition weighted mean block-locally (the mean
     decomposes over lanes — no cross-block scratch needed); phase 1 streams
     x once more against the finished aggregate accumulating the per-peer
     digest dot and squared norm, emitting both tables on the last block.
-    2 HBM passes of x, zero materialized (n, d) temporaries."""
+    2 HBM passes of x, zero materialized (n, d) temporaries.
+
+    scales_ref (dequant variant): xs arrives in its wire dtype (int8/bf16)
+    and both phases see ``xs.astype(f32) * scale`` — the exact formula of
+    core.compression.dequantize, so aggregate and digests are computed over
+    the dequantized-from-wire values (compressed:verified:mean)."""
     phase = pl.program_id(1)
     blk = pl.program_id(2)
     nb = pl.num_programs(2)
+    xs = xs_ref[0].astype(jnp.float32)
+    if scales_ref is not None:  # in-register dequantize of the wire payload
+        xs = xs * scales_ref[0]
 
     @pl.when(phase == 0)
     def _aggregate():
         w = w_ref[...].astype(jnp.float32)
         wsum = jnp.maximum(jnp.sum(w), 1e-30)
-        out_ref[0] = jnp.sum(
-            w * xs_ref[0].astype(jnp.float32), axis=0, keepdims=True
-        ) / wsum
+        out_ref[0] = jnp.sum(w * xs, axis=0, keepdims=True) / wsum
 
     @pl.when(phase == 1)
     def _digest():
@@ -833,7 +948,7 @@ def _md_kernel(w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref, sq_ref):
             dot_ref[...] = jnp.zeros_like(dot_ref)
             sq_ref[...] = jnp.zeros_like(sq_ref)
 
-        diff = xs_ref[0].astype(jnp.float32) - out_ref[0]
+        diff = xs - out_ref[0]
         dot_ref[...] += jnp.sum(
             diff * z_ref[0].astype(jnp.float32), axis=1, keepdims=True
         )
@@ -890,6 +1005,70 @@ def mean_digest_fused_pallas(
         ],
         interpret=interpret,
     )(w2, parts, z.reshape(n_parts, 1, dp))
+    return agg[:, 0, :d], s[:, 0], norms[:, 0]
+
+
+def _md_dequant_kernel(
+    w_ref, scales_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref,
+    sq_ref,
+):
+    """Positional-ref adapter: sidecar scales between w and the wire xs."""
+    _md_kernel(
+        w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref, sq_ref,
+        scales_ref=scales_ref,
+    )
+
+
+def mean_digest_fused_dequant_pallas(
+    qs, scales, z, weights=None, *,
+    block: int = DEFAULT_BLOCK, interpret: bool = True,
+):
+    """compressed:verified:mean's fused aggregation + digests over WIRE
+    payloads: qs stays int8/bf16 in HBM for both passes, dequantized
+    in-register against the sidecar scales (see
+    butterfly_clip_fused_dequant_pallas for the tiling argument).
+
+    qs: (n_parts, n, part) wire dtype; scales: (n_parts, n) f32 (1s for
+    bf16); z: (n_parts, part).
+    Returns (agg (n_parts, part), s (n_parts, n), norms (n_parts, n)).
+    """
+    n_parts, n, d = qs.shape
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        qs = jnp.pad(qs, ((0, 0), (0, 0), (0, dp - d)))  # wire zeros: exact
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    w2 = weights.reshape(n, 1).astype(jnp.float32)
+    sc3 = scales.reshape(n_parts, n, 1).astype(jnp.float32)
+    agg, s, norms = pl.pallas_call(
+        _md_dequant_kernel,
+        grid=(n_parts, 2, n_blocks),
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda p, ph, b: (0, 0)),
+            pl.BlockSpec((1, n, 1), lambda p, ph, b: (p, 0, 0)),
+            pl.BlockSpec((1, n, blk), lambda p, ph, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, ph, b: (p, 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk), lambda p, ph, b: (p, 0, b)),
+            pl.BlockSpec((1, 1, n), lambda p, ph, b: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, ph, b: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_parts, 1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((n_parts, 1, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w2, sc3, qs, z.reshape(n_parts, 1, dp))
     return agg[:, 0, :d], s[:, 0], norms[:, 0]
 
 

@@ -84,6 +84,26 @@ def butterfly_clip_fused_op(
     return agg, s.T, norms.T
 
 
+@functools.partial(jax.jit, static_argnames=("n_iters", "block"))
+def butterfly_clip_fused_dequant_op(
+    qs, scales, tau, z, weights=None, tau_v=None, v0=None, *,
+    n_iters: int = 20, block: int = _k.DEFAULT_BLOCK
+):
+    """Fused dequantize + ButterflyClip + broadcast tables over WIRE
+    payloads (compressed:butterfly_clip — core.compression): qs
+    (n_parts, n_peers, part) int8/bf16 stays in its wire dtype for all
+    n_iters + 2 HBM passes, dequantized in-register against the
+    (n_parts, n_peers) f32 sidecar scales. Returns (agg (n_parts, part),
+    s (n_peers, n_parts), norms (n_peers, n_parts)) — the layout of
+    butterfly_clip_fused_op."""
+    taus = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n_iters,))
+    agg, s, norms = _k.butterfly_clip_fused_dequant_pallas(
+        qs, scales, taus, z, tau_v=tau_v, weights=weights, v0=v0,
+        block=block, interpret=_INTERPRET,
+    )
+    return agg, s.T, norms.T
+
+
 # ---------------------------------------------------------------------------
 # Adaptive early-exit family: one-pass-per-iteration step kernel under a
 # lax.while_loop, stopping at ||v_{l+1}-v_l|| <= tol with a static max_iters
@@ -163,5 +183,20 @@ def mean_digest_fused_op(parts, z, weights=None, *, block: int = _k.DEFAULT_BLOC
     core.verification.digest_tables."""
     agg, s, norms = _k.mean_digest_fused_pallas(
         parts, z, weights, block=block, interpret=_INTERPRET
+    )
+    return agg, s.T, norms.T
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mean_digest_fused_dequant_op(
+    qs, scales, z, weights=None, *, block: int = _k.DEFAULT_BLOCK
+):
+    """compressed:verified:mean's fused dequantize + aggregation + digest
+    epilogue: qs (n_parts, n_peers, part) int8/bf16 wire payloads stay in
+    their wire dtype for both HBM passes, dequantized in-register against
+    the (n_parts, n_peers) f32 sidecar scales. Returns (agg, s, norms) in
+    the mean_digest_fused_op layout."""
+    agg, s, norms = _k.mean_digest_fused_dequant_pallas(
+        qs, scales, z, weights, block=block, interpret=_INTERPRET
     )
     return agg, s.T, norms.T

@@ -114,6 +114,32 @@ def mean_digest_fused_ref(xs, z, weights=None):
     return v, s, norms
 
 
+def dequantize_ref(wire, scales):
+    """Reference wire dequantize: element-for-element the formula the
+    dequant kernels apply in-register (and core.compression.dequantize
+    applies in jnp) — upcast to f32, one f32 multiply by the per-payload
+    sidecar scale. wire: (..., d) int8/bf16; scales: (...)."""
+    return wire.astype(jnp.float32) * scales[..., None]
+
+
+def centered_clip_fused_dequant_ref(qs, scales, taus, z, tau_v=None,
+                                    weights=None):
+    """Reference for ONE partition of the fused dequantize+clip+digest
+    kernel: dequantize the wire payloads, then the fused incremental-norm
+    recurrence. qs: (n, d) wire dtype; scales: (n,); taus: (n_iters,);
+    z: (d,). Returns (v (d,), s (n,), norms (n,)) f32."""
+    return centered_clip_fused_ref(
+        dequantize_ref(qs, scales), taus, z, tau_v=tau_v, weights=weights
+    )
+
+
+def mean_digest_fused_dequant_ref(qs, scales, z, weights=None):
+    """Reference for ONE partition of the fused dequantize+mean+digest
+    kernel (compressed:verified:mean). qs: (n, d) wire dtype; scales: (n,);
+    z: (d,). Returns (v (d,), s (n,), norms (n,)) f32."""
+    return mean_digest_fused_ref(dequantize_ref(qs, scales), z, weights)
+
+
 def verify_tables_ref(xs, v, z, tau):
     """Reference fused verification scalars.
 

@@ -182,6 +182,16 @@ def aggregation_stage(
     (butterfly_clip, verified:mean); nonlinear wrapped specs report 0 and
     rely on validator recomputation (the host protocol's audit arm).
 
+    ``compressed:<verifiable>`` specs (core.compression) quantize each
+    (peer -> owner) payload before the exchange: the gradient all_to_all
+    carries int8/bf16 wire words (≈4x / 2x fewer bytes than f32) plus one
+    f32 sidecar scale per payload in a second scalar all_to_all. All
+    aggregation and every digest then run over the dequantized-from-wire
+    values — dispatch continues with the INNER spec — so sender, owner and
+    validator agree bit-for-bit and honest peers are never accused over
+    rounding. On the Pallas paths the received wire stack feeds the fused
+    dequantize kernels directly (HBM reads stay 1-2 bytes/coordinate).
+
     Non-verifiable specs (mean, median, Krum, ...) have no partition
     ownership to verify: every peer all_gathers the full stack and applies
     the registry fn (the trusted-PS communication model, O(n·d) per peer
@@ -236,6 +246,7 @@ def aggregation_stage(
         }
         return flat.astype(jnp.float32), verif
 
+    from repro.core import compression as comp_mod
     from repro.core import verification as verif_mod
 
     part = -(-d // n_peers)
@@ -245,9 +256,34 @@ def aggregation_stage(
     x = g_vec.reshape(n_peers, part)
     # each peer receives everyone's copy of ITS partition. The barrier pins
     # the transport dtype: without it XLA hoists the downstream f32 upcast
-    # ahead of the collective, silently undoing bf16 transport (§Perf H3).
-    recv = jax.lax.all_to_all(x, peer_axes, split_axis=0, concat_axis=0, tiled=True)
-    recv = jax.lax.optimization_barrier(recv)
+    # ahead of the collective, silently undoing bf16 transport (§Perf H3)
+    # — or, for compressed specs, the wire codec itself.
+    comp_wire = None
+    if comp_mod.is_wrapped(spec):
+        # compressed:* — quantize each (peer -> owner) payload BEFORE the
+        # exchange: the gradient all_to_all ships 1-2 byte wire words, plus
+        # ONE f32 sidecar scalar per payload in a second tiny all_to_all
+        # (n_peers floats vs part*n_peers wire words). Every digest below
+        # runs over the DEQUANTIZED wire values (core.compression), so the
+        # owner's tables match any validator's recompute bit-for-bit and
+        # rounding can never trip an accusation.
+        codec = comp_mod.codec_of(spec)
+        wire, scales = comp_mod.quantize(x, codec)  # (n, part), (n,) f32
+        recv_w = jax.lax.all_to_all(
+            wire, peer_axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        recv_s = jax.lax.all_to_all(
+            scales, peer_axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        recv_w, recv_s = jax.lax.optimization_barrier((recv_w, recv_s))
+        comp_wire = (recv_w, recv_s)
+        recv = comp_mod.dequantize(recv_w, recv_s)  # the f32 wire values
+        spec = comp_mod.inner_spec(spec)  # dispatch below is by inner spec
+    else:
+        recv = jax.lax.all_to_all(
+            x, peer_axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        recv = jax.lax.optimization_barrier(recv)
 
     # --- z for the verification tables (Alg. 6): derived from the shared
     # MPRNG seed, folded by partition owner index; commitments are host-side
@@ -264,7 +300,7 @@ def aggregation_stage(
         # the fused-vs-standalone kernel dispatch lives in owner_aggregate.
         agg, s_local, norms_local, iters_used = verif_mod.owner_aggregate(
             spec, recv, z, weights, use_pallas=use_pallas,
-            key=jax.random.key(seed),
+            key=jax.random.key(seed), wire=comp_wire,
         )
         return _emit_tables(
             g_vec, d, pad, agg, s_local, norms_local, iters_used, weights,
@@ -298,6 +334,18 @@ def aggregation_stage(
         s_local, norms_local = verify_tables_op(
             recv, agg, z.astype(jnp.float32), tau
         )
+    elif use_pallas and comp_wire is not None:
+        from repro.kernels.ops import butterfly_clip_fused_dequant_op
+
+        # the wire payloads stay int8/bf16 in HBM: the fused dequantize+
+        # clip+digest kernel makes its n_iters + 2 passes over 1-2 byte
+        # data, dequantizing in-register against the sidecar scales
+        qs, qscales = comp_wire
+        agg_b, s_b, n_b = butterfly_clip_fused_dequant_op(
+            qs[None], qscales[None], tau, z.astype(jnp.float32)[None],
+            weights, v0=None if v0 is None else v0[None], n_iters=clip_iters,
+        )
+        agg, s_local, norms_local = agg_b[0], s_b[:, 0], n_b[:, 0]
     elif use_pallas:
         from repro.kernels.ops import centered_clip_fused_op
 

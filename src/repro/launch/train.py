@@ -21,6 +21,11 @@ Examples (CPU bring-up, 8 fake devices):
   python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 8 \\
       --mesh 4x2 --steps 10 --scan-steps 5 --attack sign_flip \\
       --byzantine 1,3 --aggregator krum
+  # compressed wire: int8 butterfly payloads + f32 scale sidecars, digests
+  # over the dequantized wire values (verification stays exact)
+  python -m repro.launch.train --arch qwen3-1.7b --reduced --host-devices 4 \\
+      --mesh 2x2 --steps 8 --scan-steps 4 --attack sign_flip --byzantine 1 \\
+      --aggregator compressed:verified:mean
 """
 import argparse
 import os
@@ -104,6 +109,14 @@ def main():
                          "recomputable contribution digests instead of the "
                          "O(n*d) PS all_gather (e.g. "
                          "verified:trimmed_mean:trim_ratio=0.2). "
+                         "compressed:SPEC[:codec=int8|bf16] quantizes the "
+                         "butterfly all_to_all payloads (int8: ~4x fewer "
+                         "wire bytes + one f32 scale sidecar per payload; "
+                         "default codec int8) with every digest computed "
+                         "over the dequantized wire values, so "
+                         "verification stays exact (e.g. "
+                         "compressed:verified:mean, "
+                         "compressed:butterfly_clip:codec=bf16). "
                          "Non-verifiable specs run without the "
                          "verification/ban machinery. --tau and "
                          "--clip-iters fill the spec's defaults; explicit "

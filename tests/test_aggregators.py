@@ -41,11 +41,15 @@ def test_registry_covers_all_paper_baselines():
     assert {"mean", "coordinate_median", "trimmed_mean", "geometric_median",
             "krum", "centered_clip", "butterfly_clip"} <= names
     # the verifiable set: the flagship plus exactly one verified:<base>
-    # wrapper per coordinatewise baseline (core.verification)
-    assert {n for n in names if AggregatorSpec(n).verifiable} == {
+    # wrapper per coordinatewise baseline (core.verification), each also
+    # available with quantized wire payloads (core.compression)
+    verifiable = {
         "butterfly_clip", "verified:mean", "verified:trimmed_mean",
         "verified:coordinate_median",
     }
+    assert {n for n in names if AggregatorSpec(n).verifiable} == (
+        verifiable | {f"compressed:{n}" for n in verifiable}
+    )
 
 
 def test_spec_parse_and_canonical_roundtrip():

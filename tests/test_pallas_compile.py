@@ -243,6 +243,57 @@ print("PALLAS_COMPILE_OK")
     assert "PALLAS_COMPILE_OK" in r.stdout
 
 
+@pytest.mark.parametrize("codec", ["int8", "bf16"])
+def test_fused_dequant_butterfly_lowers_natively(codec):
+    """The compressed:butterfly_clip hot path — fused dequantize + clip +
+    digest over WIRE payloads (int8/bf16 blocks in HBM, f32 sidecar scales
+    in a (1, n, 1) block) — through the real Mosaic pipeline, per wire
+    dtype."""
+    from repro.core import compression as comp
+
+    x = _stack(23, (PARTS, N, D))
+    qs, scales = comp.quantize(x, codec)
+    z = _stack(24, (PARTS, D))
+    taus = jnp.full((ITERS,), 1.0, jnp.float32)
+
+    def fn(q, s, zz):
+        return _k.butterfly_clip_fused_dequant_pallas(
+            q, s, taus, zz, interpret=False
+        )
+
+    out = _validate(fn, qs, scales, z)
+    if out is not None:
+        ref = _k.butterfly_clip_fused_dequant_pallas(
+            qs, scales, taus, z, interpret=True
+        )
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("codec", ["int8", "bf16"])
+def test_mean_digest_fused_dequant_lowers_natively(codec):
+    """compressed:verified:mean's fused dequantize + mean + digest kernel
+    must lower as a unit for both wire dtypes (the int8 path exercises
+    integer-block loads that interpret mode cannot validate)."""
+    from repro.core import compression as comp
+
+    x = _stack(25, (PARTS, N, D))
+    qs, scales = comp.quantize(x, codec)
+    z = _stack(26, (PARTS, D))
+    w = jnp.ones((N,)).at[2].set(0.0)
+
+    def fn(q, s, zz):
+        return _k.mean_digest_fused_dequant_pallas(q, s, zz, w, interpret=False)
+
+    out = _validate(fn, qs, scales, z)
+    if out is not None:
+        ref = _k.mean_digest_fused_dequant_pallas(
+            qs, scales, z, w, interpret=True
+        )
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
+
+
 def test_adaptive_step_kernel_lowers_natively():
     """The one-pass adaptive clip iteration (cw from carried sq, v update,
     incremental next-sq) through the real Mosaic pipeline."""
