@@ -21,7 +21,12 @@ Four views:
     (int8 ~4x fewer all_to_all bytes; regression-gated);
   * the scan-engine view: steps/s of the legacy host protocol loop vs the
     jitted lax.scan ProtocolState engine (core.engine), at the default
-    clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json.
+    clip_iters=60 and at warm-start clip_iters=15 -> BENCH_scan.json;
+  * the flat-cost scaling curve (n in {16, 64, 256, 1024}): per-peer table
+    bytes + measured engine throughput/bans under sampled-digest audits and
+    the hierarchical butterfly-of-butterflies (core.hierarchy), plus the
+    per-phase SYMBOLIC comm model (sympy) cross-checked against the
+    implementation — both gated in check_regression.py.
 
 Emits BENCH_overhead.json + BENCH_scan.json next to this file (or --out-dir)
 so the perf trajectory is machine-trackable across PRs; CI regenerates both
@@ -29,6 +34,7 @@ with --quick and gates merges on benchmarks/check_regression.py.
 """
 import argparse
 import json
+import math
 import os
 import time
 
@@ -135,6 +141,274 @@ def comm_model_per_spec(n, d, bytes_per=4):
         else:
             out[name] = cell(defn, bytes_per, 0)
     return out
+
+
+def symbolic_comm_model(bytes_per=4):
+    """Per-phase SYMBOLIC communication-complexity model (sympy) of one
+    robust all-reduce round, per verification mode — the closed forms the
+    numeric models above instantiate, kept as expressions so the asymptotic
+    claims (table bytes O(n^2) -> O(n*k) -> O(n^2/g + g^2)) are
+    machine-checkable rather than prose.
+
+    Symbols: n peers, d gradient dim, g groups, k sampled digest columns
+    per step (k = m_validators * audit_k), b bytes/scalar. Phases follow
+    launch/steps.aggregation_stage: the gradient all_to_all (~d sent per
+    peer), the aggregate all_gather (~d received), and the verification
+    table broadcast (digest + norm columns + the 3n checksum/vote/hash
+    sidecars; hierarchical mode adds the g x g level-2 digest exchange).
+
+    Every expression is cross-checked numerically against
+    repro.core.hierarchy.table_scalars at the evaluation points — the gate
+    in check_regression.py fails if the symbolic and implemented models
+    ever drift apart. Returns a JSON-ready dict (expressions as strings).
+    """
+    import sympy as sp
+
+    from repro.core import hierarchy as hier
+
+    n, d, g, k, b = sp.symbols("n d g k b", positive=True)
+    gs = n / g
+
+    class Communication:
+        """Accumulates per-phase symbolic costs (pia-mpc complexity idiom):
+        one expression per protocol phase, summed into the per-peer round
+        total."""
+
+        def __init__(self):
+            self.phases = {}
+
+        def add(self, phase, expr):
+            self.phases[phase] = sp.expand(self.phases.get(phase, 0) + expr)
+
+        def total(self):
+            return sp.expand(sum(self.phases.values(), sp.Integer(0)))
+
+        def table_total(self):
+            return sp.expand(sum(
+                (e for p, e in self.phases.items() if "table" in p
+                 or "digest" in p), sp.Integer(0)))
+
+        def as_dict(self):
+            return {p: str(e) for p, e in self.phases.items()}
+
+    def build(mode):
+        c = Communication()
+        c.add("gradient_all_to_all", d * b)  # each peer ships d coords total
+        c.add("aggregate_all_gather", d * b)
+        if mode == "full":
+            c.add("table_broadcast", (2 * n**2 + 3 * n) * b)
+        elif mode == "sampled":
+            # only the k sampled digest columns broadcast; checksum/vote/
+            # hash sidecars stay per-column-owner (3n)
+            c.add("table_broadcast", (2 * n * k + 3 * n) * b)
+        elif mode == "hierarchical":
+            c.add("table_broadcast", (2 * gs**2 + 3 * gs) * b)
+            c.add("level2_digest_exchange", (2 * g**2 + 3 * g) * b)
+        elif mode == "hierarchical_sampled":
+            # k <= gs columns sampled within each group
+            c.add("table_broadcast", (2 * gs * k + 3 * gs) * b)
+            c.add("level2_digest_exchange", (2 * g**2 + 3 * g) * b)
+        return c
+
+    modes = {m: build(m) for m in (
+        "full", "sampled", "hierarchical", "hierarchical_sampled")}
+    full_tables = modes["full"].table_total()
+
+    # numeric cross-check vs the implemented model (core.hierarchy):
+    # sympy expression == table_scalars() at every evaluation point, exactly
+    points = [
+        {"n": 64, "g": 8, "k": 2},
+        {"n": 256, "g": 16, "k": 4},
+        {"n": 1024, "g": 32, "k": 4},
+    ]
+    checks = []
+    for pt in points:
+        subs = {n: pt["n"], g: pt["g"], k: pt["k"], b: 1}
+        impl = {
+            "full": hier.table_scalars(pt["n"]),
+            "sampled": hier.table_scalars(
+                pt["n"], m_validators=1, audit_k=pt["k"]),
+            "hierarchical": hier.table_scalars(pt["n"], groups=pt["g"]),
+            "hierarchical_sampled": hier.table_scalars(
+                pt["n"], m_validators=1, audit_k=pt["k"], groups=pt["g"]),
+        }
+        sym = {m: int(c.table_total().subs(subs)) for m, c in modes.items()}
+        checks.append({
+            "point": pt,
+            "symbolic": sym,
+            "implemented": impl,
+            "match": sym == impl,
+        })
+
+    return {
+        "symbols": {"n": "peers", "d": "gradient dim", "g": "groups",
+                    "k": "sampled digest columns/step (m_validators*audit_k)",
+                    "b": "bytes/scalar"},
+        "phases": {m: c.as_dict() for m, c in modes.items()},
+        "per_peer_total": {m: str(c.total()) for m, c in modes.items()},
+        "table_bytes": {m: str(c.table_total()) for m, c in modes.items()},
+        "table_ratio_vs_full": {
+            m: str(sp.simplify(c.table_total() / full_tables))
+            for m, c in modes.items()
+        },
+        "cross_check": checks,
+        "bytes_per": bytes_per,
+    }
+
+
+def _detect_bound(n, m_val, groups, audit_k=None):
+    """Steps until the sign_flip workload's Byzantine peers are provably
+    banned. Hierarchical full-table mode trips the GROUP-majority
+    Delta_max vote within a step or two — a lone sign-flipper shifts its
+    gs-peer group mean far past delta_max for every member, and the vote
+    + exoneration recompute bans exactly the cheater. Under sampled
+    digests the vote only sees SAMPLED columns (the zero-scatter
+    invariant zeroes unsampled norms on both sides), so the composed
+    mode's time-to-ban is the age-priority column draw reaching the
+    cheater's own column — the staleness window ceil(n/(m*k)) + 2 — or
+    the validator peer-audit backstop, whichever is sooner. Flat modes at
+    larger n dilute the corruption across the global mean (V3 stays
+    silent), so time-to-ban is that audit backstop alone: age-priority
+    CHOOSETARGET covers every peer within ~ceil(n/m) steps. The +slack
+    absorbs validator rotation (a peer serving as validator is not
+    auditable that step)."""
+    audit_cover = math.ceil(n / m_val)
+    if groups:
+        if audit_k is None:
+            return 12
+        staleness = math.ceil(n / (m_val * audit_k)) + 2
+        return min(staleness, audit_cover) + 10
+    return audit_cover + 10
+
+
+def flat_cost_scaling(fast=True):
+    """The tentpole scaling curve: per-peer verification-table bytes
+    (analytic — core.hierarchy.table_scalars) and measured scan-engine
+    throughput + ban behaviour as n grows, for the four mode combinations
+    {full, sampled, hierarchical, hierarchical+sampled}.
+
+    The analytic rows cover every n; the measured rows run the full
+    ProtocolState engine (sign_flip Byzantine workload, Delta_max votes +
+    validator audits live) on the n's a CI runner can afford — quick mode
+    stops at 64, full mode at 1024. Each cell runs for its mode's
+    :func:`_detect_bound` steps (capped), so the ban outcome is a
+    guarantee check, not a race: cells whose bound fits under the cap
+    carry ``bans_gated=True`` and check_regression.py requires
+    ``bans_exact`` there; over-cap cells (flat modes at n=1024 — the
+    audit backstop needs ~n/m steps — and the composed mode at n=1024,
+    whose column-staleness window is ~n/(m*k)) are throughput-only,
+    gated on zero honest bans. Also gated: at n=1024 the hierarchical+sampled per-peer
+    table bytes must be <= 10% of full.
+    """
+    from repro.core import hierarchy as hier
+    from repro.core.engine import EngineConfig, init_state, make_scan_runner
+
+    M_VAL, AUDIT_K = 2, 2
+    step_cap = 64 if fast else 160
+    ns = [16, 64, 256, 1024]
+    measured_ns = [16, 64] if fast else [16, 64, 256, 1024]
+    rows = []
+    for n in ns:
+        g = int(np.sqrt(n))
+        modes = {
+            "full": {},
+            "sampled": {"audit_k": AUDIT_K},
+            "hierarchical": {"groups": g},
+            "hierarchical_sampled": {"audit_k": AUDIT_K, "groups": g},
+        }
+        table_bytes = {
+            m: hier.table_bytes(
+                n, m_validators=M_VAL, audit_k=kw.get("audit_k"),
+                groups=kw.get("groups"),
+            )
+            for m, kw in modes.items()
+        }
+        row = {
+            "n": n,
+            "groups": g,
+            "audit_k": AUDIT_K,
+            "m_validators": M_VAL,
+            "table_bytes": table_bytes,
+            "table_frac_vs_full": {
+                m: tb / table_bytes["full"] for m, tb in table_bytes.items()
+            },
+        }
+        if n in measured_ns:
+            d = 4 * n
+            # one Byzantine per far-apart group so no group is majority-Byz
+            byz_ids = (0, n // 2)
+            byz = jnp.zeros((n,)).at[jnp.asarray(byz_ids)].set(1.0)
+            measured = {}
+            for m, kw in modes.items():
+                bound = _detect_bound(
+                    n, M_VAL, kw.get("groups"), kw.get("audit_k")
+                )
+                gated = bound <= step_cap
+                # over-cap cells (flat audit coverage ~n/m steps at
+                # n=1024) are throughput-only: short program, bans
+                # reported but not gated
+                steps = bound if gated else 12
+                cfg = EngineConfig(
+                    n=n, d=d, attack="sign_flip", lam=100.0, start_step=0,
+                    clip_iters=5, m_validators=M_VAL, delta_max=25.0,
+                    aggregator="verified:mean", **kw,
+                )
+                runner = make_scan_runner(
+                    cfg, _scaling_grads_fn(n, d), steps
+                )
+                st0 = init_state(cfg, seed=0)
+                params = jnp.zeros(())
+                state, _, outs = runner(st0, byz, params)  # warmup+trace
+                jax.block_until_ready(state)
+                reps = 1 if steps >= 48 else 2
+                best = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    state, _, outs = runner(st0, byz, params)
+                    jax.block_until_ready(state)
+                    best = min(best, time.perf_counter() - t0)
+                banned = sorted(
+                    int(i)
+                    for i in np.nonzero(np.asarray(state.ban_step) >= 0)[0]
+                )
+                measured[m] = {
+                    "steps": steps,
+                    "detect_bound": bound,
+                    "bans_gated": gated,
+                    "steps_per_s": steps / best,
+                    "banned": banned,
+                    "byzantine": list(byz_ids),
+                    "bans_exact": banned == sorted(byz_ids),
+                    "honest_banned": sorted(
+                        set(banned) - set(int(i) for i in byz_ids)
+                    ),
+                }
+                emit(
+                    f"overhead/scaling/n={n}/{m}",
+                    1e6 * best / steps,
+                    f"sps={steps / best:.1f};"
+                    f"table_bytes={table_bytes[m]};"
+                    f"frac={row['table_frac_vs_full'][m]:.4f};"
+                    f"steps={steps};gated={gated};"
+                    f"bans_exact={measured[m]['bans_exact']}",
+                )
+            row["measured"] = measured
+        rows.append(row)
+    return {"step_cap": step_cap, "rows": rows}
+
+
+def _scaling_grads_fn(n, d):
+    """Honest per-step gradients for the scaling bench: unit-variance
+    noise around a fixed descent direction; the engine's phase_attack
+    applies the configured Byzantine corruption itself."""
+    mu = jax.random.normal(jax.random.key(7), (d,)) * 0.1
+
+    def grads_fn(params, t, flips):
+        key = jax.random.fold_in(jax.random.key(1), t)
+        G = mu[None] + jax.random.normal(key, (n, d), jnp.float32)
+        return G, G
+
+    return grads_fn
 
 
 def hbm_pass_model(n_iters, n, d, bytes_per=4, adaptive_iters=2):
@@ -406,6 +680,14 @@ def main(fast=True, out_dir=None):
                 "comm_btard_extra_bytes": extra,
             }
         )
+    # the tentpole scaling curve + the symbolic per-phase comm model: table
+    # bytes flat in n under sampling/hierarchy, cross-checked sympy-vs-
+    # implementation, with measured engine cells where CI can afford them
+    scaling = flat_cost_scaling(fast=fast)
+    symbolic = symbolic_comm_model()
+    for chk in symbolic["cross_check"]:
+        if not chk["match"]:
+            emit("overhead/symbolic_mismatch", 1.0, str(chk))
     # per-aggregator communication model at the largest measured dim: the
     # verified: wrapper's butterfly O(d) per peer vs the PS O(n*d) gather
     comm_per_spec = comm_model_per_spec(n, dims[-1])
@@ -425,6 +707,8 @@ def main(fast=True, out_dir=None):
         if os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
         else "compiled",
         "comm_per_spec": {"n_peers": n, "d": dims[-1], "specs": comm_per_spec},
+        "flat_cost_scaling": scaling,
+        "symbolic_comm": symbolic,
         "records": records,
     }
     with open(json_path, "w") as f:

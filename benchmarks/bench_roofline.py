@@ -34,15 +34,16 @@ from benchmarks.common import emit
 CLIP_FLOPS_PER_COORD = 8.0
 
 
-def codec_roofline(n=16, n_iters=20, dims=None, bytes_per=4):
+def codec_roofline(n=16, n_iters=20, dims=None, bytes_per=4,
+                   m_validators=1, audit_k=None, groups=None, tag=""):
     """Bandwidth roofline of ONE compressed robust all-reduce per codec.
 
     Per (codec, d) the three per-peer time terms:
 
       comm    = bytes_on_wire / ICI_BW  — the all_to_all payload leg
-                (d * codec_bytes + 2n f32 sidecar scales + the O(n^2)
-                broadcast tables; the aggregate all_gather rides the
-                transport dtype and cancels across codecs)
+                (d * codec_bytes + 2n f32 sidecar scales + the broadcast
+                tables; the aggregate all_gather rides the transport dtype
+                and cancels across codecs)
       compute = n_iters * d * CLIP_FLOPS_PER_COORD / PEAK_FLOPS — the
                 owner-side CenteredClip work across all partitions
       hbm     = (n_iters + 2) * d * codec_bytes / HBM_BW — the fused
@@ -58,15 +59,26 @@ def codec_roofline(n=16, n_iters=20, dims=None, bytes_per=4):
           this codec's comm time at dim d (above it the round is
           compute-bound and further wire compression stops paying).
 
+    Table bytes are priced through core.hierarchy.table_bytes — the SAME
+    analytic model bench_overhead and check_regression use — so the
+    sampled-digest (``audit_k``) and hierarchical (``groups``) axes lower
+    the table-bound floor here exactly as they shrink the wire: under
+    sampling the full-table 2n^2 term would overstate payload_dominant_d
+    by the sampling factor.
+
     Returns {codec: [per-dim records]}; every record is emitted for the
     perf trajectory. Pure model — mirror of bench_overhead.comm_model — so
     it runs identically on any host.
     """
     from repro.core.compression import CODEC_BYTES
+    from repro.core.hierarchy import table_bytes as hier_table_bytes
 
     if dims is None:
         dims = [1 << 14, 1 << 17, 1 << 20, 1 << 23, 1 << 26]
-    table_b = (2 * n * n + 3 * n) * bytes_per
+    table_b = hier_table_bytes(
+        n, m_validators=m_validators, audit_k=audit_k, groups=groups,
+        bytes_per=bytes_per,
+    )
     out = {}
     for codec, cb in dict(CODEC_BYTES, f32=bytes_per).items():
         sidecar_b = 0 if codec == "f32" else 2 * n * bytes_per
@@ -96,7 +108,7 @@ def codec_roofline(n=16, n_iters=20, dims=None, bytes_per=4):
         }
         for r in rows:
             emit(
-                f"roofline/codec/{codec}/d={r['d']}",
+                f"roofline/codec{tag}/{codec}/d={r['d']}",
                 1e6 * r["t_comm_s"],
                 f"compute_us={1e6 * r['t_compute_s']:.2f};"
                 f"hbm_us={1e6 * r['t_hbm_s']:.2f};"
@@ -138,15 +150,29 @@ def analyze_record(rec):
 
 
 def main(fast=True, out_dir="results/dryrun"):
-    codecs = codec_roofline()
-    print("# codec,payload_dominant_d,largest_dim_dominant,wire_reduction_x")
-    for codec, block in codecs.items():
-        last = block["dims"][-1]
-        print(
-            f"{codec},{block['payload_dominant_d']:.0f},{last['dominant']},"
-            f"{last['wire_reduction_x']:.2f}",
-            flush=True,
-        )
+    # full Alg. 6 tables vs the flat-cost axes (sampled digests at
+    # m_validators=2 x audit_k=2; 4 groups of 4 at n=16): the table-bound
+    # wire floor drops with the tables, so payload_dominant_d falls by the
+    # sampling factor — the full-table figure would overstate it.
+    variants = {
+        "": dict(),
+        "/sampled": dict(m_validators=2, audit_k=2),
+        "/hier_sampled": dict(m_validators=2, audit_k=2, groups=4),
+    }
+    print(
+        "# variant,codec,payload_dominant_d,largest_dim_dominant,"
+        "wire_reduction_x"
+    )
+    for tag, kw in variants.items():
+        codecs = codec_roofline(tag=tag, **kw)
+        for codec, block in codecs.items():
+            last = block["dims"][-1]
+            print(
+                f"{tag or '/full'},{codec},"
+                f"{block['payload_dominant_d']:.0f},{last['dominant']},"
+                f"{last['wire_reduction_x']:.2f}",
+                flush=True,
+            )
     files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
     if not files:
         emit("roofline/no_dryrun_artifacts", 0.0, "run launch.dryrun first")

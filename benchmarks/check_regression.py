@@ -21,6 +21,12 @@ Compares freshly generated BENCH_*.json (``bench_overhead.py --quick
   model (butterfly vs PS all_gather topology, table bytes) is analytic and
   gated exactly, including the compressed:* wire-codec columns (the int8
   all_to_all leg must stay >= 3.5x smaller than the f32 payload).
+* flat-cost verification gates (:func:`check_flat_cost`) — at n=1024 the
+  sampled / hierarchical / composed per-peer table bytes must each stay
+  <= 10% of full Alg. 6; every measured scaling cell must ban zero honest
+  peers, and cells run past their detection bound must ban EXACTLY their
+  Byzantine peers; the sympy symbolic comm model must agree with
+  core.hierarchy.table_scalars at every cross-check point.
 * absolute steps/s — fresh >= baseline * (1 - tol). The band is wide
   (default 0.6) because hosted runners are noisy and slower than the dev
   machine; the ratio invariants above are the sharp gate.
@@ -150,6 +156,70 @@ def check_overhead(fresh, base, errors):
                 )
 
 
+def check_flat_cost(fresh, errors):
+    """Flat-cost verification gates (sampled digests + hierarchy).
+
+    Analytic and protocol-behaviour gates on the FRESH run only — the
+    table model and the symbolic cross-check are machine-independent, and
+    the measured ban outcomes are guarantees (each cell runs past its
+    detection bound when ``bans_gated``), not wall-clock races.
+    """
+    scaling = fresh.get("flat_cost_scaling")
+    if scaling is None:
+        errors.append("fresh BENCH_overhead.json missing flat_cost_scaling")
+    else:
+        rows = {r["n"]: r for r in scaling.get("rows", [])}
+        for n in (16, 64, 256, 1024):
+            if n not in rows:
+                errors.append(f"flat_cost_scaling missing n={n} row")
+        big = rows.get(1024)
+        if big is not None:
+            frac = big["table_frac_vs_full"]
+            # the tentpole acceptance: composed sampling+hierarchy shrinks
+            # per-peer table bytes to <= 10% of full Alg. 6 at n=1024
+            # (each single axis must already clear the same bar there)
+            for mode in ("sampled", "hierarchical", "hierarchical_sampled"):
+                if frac.get(mode, 1.0) > 0.10:
+                    errors.append(
+                        f"flat_cost_scaling n=1024 {mode}: table bytes "
+                        f"{frac.get(mode, 1.0):.4f} of full > 0.10 ceiling "
+                        "(table model drift)"
+                    )
+        for n, row in rows.items():
+            for mode, cell in row.get("measured", {}).items():
+                tag = f"flat_cost_scaling n={n} {mode}"
+                if cell.get("honest_banned"):
+                    errors.append(
+                        f"{tag}: banned honest peers "
+                        f"{cell['honest_banned']} (protocol regression)"
+                    )
+                if cell.get("bans_gated") and not cell.get("bans_exact"):
+                    errors.append(
+                        f"{tag}: ran {cell.get('steps')} steps past the "
+                        f"detection bound {cell.get('detect_bound')} but "
+                        f"banned {cell.get('banned')} != byzantine "
+                        f"{cell.get('byzantine')} (detection arm regressed)"
+                    )
+                if not cell.get("steps_per_s", 0) > 0:
+                    errors.append(f"{tag}: not jit/scan-clean")
+
+    symbolic = fresh.get("symbolic_comm")
+    if symbolic is None:
+        errors.append("fresh BENCH_overhead.json missing symbolic_comm")
+        return
+    checks = symbolic.get("cross_check", [])
+    if not checks:
+        errors.append("symbolic_comm has no cross_check points")
+    for c in checks:
+        if not c.get("match"):
+            errors.append(
+                f"symbolic_comm cross-check diverged at {c.get('point')}: "
+                f"symbolic {c.get('symbolic')} != implemented "
+                f"{c.get('implemented')} (hierarchy.table_scalars and the "
+                "sympy model must move together)"
+            )
+
+
 def check_scan(fresh, base, tol, errors):
     x = fresh.get("scan_speedup_x", 0.0)
     if x < MIN_SCAN_X:
@@ -276,6 +346,7 @@ def main():
         fresh, base = _load(fresh_p), _load(base_p)
         if checker is not None:
             checker(fresh, base, errors)
+            check_flat_cost(fresh, errors)
         else:
             check_scan(fresh, base, args.tol, errors)
 

@@ -52,6 +52,7 @@ from repro.core import aggregators as agg_mod
 from repro.core import attacks as attacks_mod
 from repro.core import butterfly as bf
 from repro.core import compression as comp_mod
+from repro.core import hierarchy as hier_mod
 from repro.core import verification as verif_mod
 
 # Ban reason codes (StepOutputs.ban_reason_now / ProtocolState.ban_reason)
@@ -87,6 +88,9 @@ class ProtocolState(NamedTuple):
     ban_reason: jnp.ndarray  # (n,) i32 — BAN_* code
     accused_count: jnp.ndarray  # (n,) i32 — accusation ledger (cumulative)
     last_checked: jnp.ndarray  # (n,) i32 — step last audited by a validator
+    col_checked: jnp.ndarray  # (n,) i32 — step each digest COLUMN was last
+    # broadcast/audited (sampled-digest mode's staleness ledger; all
+    # columns every step when sampling is off)
     delay_buf: jnp.ndarray  # (D, n, d) f32 — ring buffer for delayed attack
 
 
@@ -107,6 +111,8 @@ class StepOutputs(NamedTuple):
     clip_iters_used: jnp.ndarray  # () i32 — max CenteredClip iterations any
     # partition ran (== cfg.clip_iters on the fixed path; the adaptive
     # early-exit's actual budget otherwise)
+    sampled_parts: jnp.ndarray  # (n,) bool — digest columns broadcast this
+    # step (all-True when sampled-digest mode is off)
 
 
 @dataclass(frozen=True)
@@ -146,6 +152,28 @@ class EngineConfig:
     # Non-verifiable specs (mean, krum, ...) degrade the verification /
     # accusation / ban phases to no-ops — see core.aggregators.
     aggregator: "agg_mod.AggregatorSpec | str | None" = None
+    # --- flat-cost verification at scale (core.hierarchy) ---
+    # sampled-digest audit mode: the m validators jointly audit
+    # m * audit_k digest COLUMNS per step (top-k by audit age + U(0,1)
+    # from the step's MPRNG key — unpredictable, recomputable, staleness-
+    # bounded), so table broadcast is O(n*k) instead of O(n^2).
+    # None = full Alg. 6 tables. Verifiable specs only.
+    audit_k: int | None = None
+    # hierarchical butterfly-of-butterflies: peers split into `groups`
+    # groups of n/groups; level-1 butterfly + gs x gs tables inside each
+    # group, linear level-2 combine across groups with its own g x g
+    # digest exchange (always-on zero-sum checksum). None/1 = flat.
+    groups: int | None = None
+
+    def __post_init__(self):
+        if self.audit_k is not None and self.audit_k < 1:
+            raise ValueError("audit_k must be >= 1 (None = full tables)")
+        if self.groups is not None and self.groups > 1:
+            hier_mod.group_shape(self.n, self.groups)  # validates n % g
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.groups is not None and self.groups > 1
 
     def agg_spec(self) -> "agg_mod.AggregatorSpec":
         """The resolved aggregator spec (legacy knobs filled as defaults).
@@ -230,6 +258,7 @@ def init_state(cfg: EngineConfig, seed: int = 0) -> ProtocolState:
         ban_reason=jnp.zeros((n,), jnp.int32),
         accused_count=jnp.zeros((n,), jnp.int32),
         last_checked=jnp.full((n,), -1, jnp.int32),
+        col_checked=jnp.full((n,), -1, jnp.int32),
         # bf16: the buffer only feeds the delayed ATTACK rows (they mismatch
         # honest_G regardless), and it is the one O(delay·n·d) carry
         delay_buf=jnp.zeros(
@@ -315,8 +344,16 @@ def phase_mprng(cfg: EngineConfig, state: ProtocolState, byz):
     return seed, mprng_ban
 
 
+def _scatter_cols(values, idx, n, n_cols):
+    """Scatter (n, k) sampled-column tables into zero (n, n_cols) tables.
+    Unsampled columns are identically zero on BOTH the reported and the
+    recomputed side, so every downstream mismatch/checksum/vote term is
+    silent there by construction — no masking plumbing anywhere else."""
+    return jnp.zeros((n, n_cols), jnp.float32).at[:, idx].set(values)
+
+
 def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
-                      seed):
+                      seed, samp_idx=None):
     """Spec-dispatched robust aggregation (``cfg.aggregator``).
 
     Verifiable specs — the ButterflyClip flagship (per-partition
@@ -366,18 +403,37 @@ def phase_aggregation(cfg: EngineConfig, state: ProtocolState, G, weights,
             use_pallas=cfg.use_pallas,
         )
         return agg, parts, z, None, None, iters_used
+    if samp_idx is not None:
+        # sampled-digest mode: aggregate WITHOUT the fused table epilogue,
+        # then digest only the k sampled columns (one O(n*k*part) pass —
+        # the scalar-prefetch rows kernel under use_pallas) and scatter
+        # them into zero tables
+        agg, parts, _s, _n, iters_used = verif_mod.spec_aggregate(
+            spec, G, z=None, weights=weights, v0=v0,
+            use_pallas=cfg.use_pallas,
+        )
+        s_r, n_r = verif_mod.digest_tables_rows(
+            spec, parts, agg, z, samp_idx, use_pallas=cfg.use_pallas
+        )
+        s_tbl = _scatter_cols(s_r, samp_idx, cfg.n, cfg.n_parts)
+        norm_tbl = _scatter_cols(n_r, samp_idx, cfg.n, cfg.n_parts)
+        return agg, parts, z, s_tbl, norm_tbl, iters_used
     agg, parts, s_tbl, norm_tbl, iters_used = verif_mod.spec_aggregate(
         spec, G, z=z, weights=weights, v0=v0, use_pallas=cfg.use_pallas,
     )
     return agg, parts, z, s_tbl, norm_tbl, iters_used
 
 
-def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
+def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights,
+                            samp_idx=None):
     """Byzantine aggregators corrupt their partitions; every honest peer
     then reports tables against the corrupted value it received, and one
     colluder cancels the Verification-2 checksum (App. C). The recomputed
     tables are spec-aware: clipped residuals for butterfly_clip, plain
-    contribution digests for verified:* wrapped specs."""
+    contribution digests for verified:* wrapped specs. Under sampled-digest
+    mode only the sampled columns exist (zero-scattered like the honest
+    path), so a corrupted unsampled column goes unnoticed until its
+    staleness-bounded turn — the property the coverage tests pin down."""
     honest_agg = agg
     corrupt = jnp.zeros((cfg.n_parts,), bool)
     if cfg.aggregator_attack and cfg.aggregator_scale > 0:
@@ -386,9 +442,17 @@ def phase_aggregator_attack(cfg, state, agg, parts, z, byz, weights):
         agg = attacks_mod.aggregator_shift_all(
             agg, corrupt, _phase_key(state, 3), cfg.aggregator_scale
         )
-        s_tbl, norm_tbl = verif_mod.spec_tables(
-            cfg.agg_spec(), parts, agg, z, use_pallas=cfg.use_pallas
-        )
+        if samp_idx is not None:
+            s_r, n_r = verif_mod.digest_tables_rows(
+                cfg.agg_spec(), parts, agg, z, samp_idx,
+                use_pallas=cfg.use_pallas,
+            )
+            s_tbl = _scatter_cols(s_r, samp_idx, cfg.n, cfg.n_parts)
+            norm_tbl = _scatter_cols(n_r, samp_idx, cfg.n, cfg.n_parts)
+        else:
+            s_tbl, norm_tbl = verif_mod.spec_tables(
+                cfg.agg_spec(), parts, agg, z, use_pallas=cfg.use_pallas
+            )
     else:
         s_tbl = norm_tbl = None
     return agg, honest_agg, corrupt, s_tbl, norm_tbl
@@ -408,6 +472,33 @@ def phase_misreport(cfg, s_tbl, corrupt, byz, active, weights):
     lie = -others / jnp.maximum(w_liar, 1e-30)
     new_row = jnp.where(corrupt & has_liar & (w_liar > 0), lie, s_tbl[liar])
     return s_tbl.at[liar].set(new_row)
+
+
+def _choose_targets(cfg, state, active_b):
+    """Audit-age-weighted CHOOSETARGET: the m validators take the m distinct
+    candidates with the highest age + U(0,1) score (age = steps since last
+    audit), so every active peer is audited at least every ~ceil(n/m) steps
+    — the uniform draw's coupon-collector tail is gone — while fresh
+    per-step jitter keeps the audit ORDER unpredictable. Targets are
+    publicly derivable from the revealed seed (like the paper's
+    CHOOSETARGET), so every peer maintains the same last_checked ledger.
+
+    Returns (target (n,) — validator v audits target[v], valid_audit,
+    is_validator, target_hot (n, n) bool, audited (n,) bool)."""
+    n = cfg.n
+    cand = active_b & (state.validator <= 0)
+    n_cand = cand.sum()
+    u = jax.random.uniform(_phase_key(state, 5), (n,))
+    age = (state.step - state.last_checked).astype(jnp.float32)
+    score = jnp.where(cand, age + u, -jnp.inf)
+    order = jnp.argsort(-score)  # candidate peer ids by audit priority
+    is_validator = (state.validator > 0) & active_b
+    val_ord = jnp.clip(jnp.cumsum(is_validator) - 1, 0, n - 1)
+    target = order[val_ord]  # (n,) — validator v audits target[v]
+    valid_audit = is_validator & (val_ord < n_cand)
+    target_hot = jax.nn.one_hot(target, n, dtype=bool)
+    audited = (target_hot & valid_audit[:, None]).any(axis=0)
+    return target, valid_audit, is_validator, target_hot, audited
 
 
 def phase_verify(cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl,
@@ -448,24 +539,11 @@ def phase_verify(cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl,
         check_averaging = v3.sum().astype(jnp.int32)
         sys_accuse = sys_accuse | v3
 
-    # validator spot checks — audit-age-weighted CHOOSETARGET. The m
-    # validators take the m distinct candidates with the highest
-    # age + U(0,1) score (age = steps since last audit), so every active
-    # peer is audited at least every ~ceil(n/m) steps — the uniform draw's
-    # coupon-collector tail is gone — while fresh per-step jitter keeps the
-    # audit ORDER unpredictable. Targets are publicly derivable from the
-    # revealed seed (like the paper's CHOOSETARGET), so every peer can
-    # maintain the same last_checked ledger.
-    cand = active_b & (state.validator <= 0)
-    n_cand = cand.sum()
-    u = jax.random.uniform(_phase_key(state, 5), (n,))
-    age = (state.step - state.last_checked).astype(jnp.float32)
-    score = jnp.where(cand, age + u, -jnp.inf)
-    order = jnp.argsort(-score)  # candidate peer ids by audit priority
-    is_validator = (state.validator > 0) & active_b
-    val_ord = jnp.clip(jnp.cumsum(is_validator) - 1, 0, n - 1)
-    target = order[val_ord]  # (n,) — validator v audits target[v]
-    valid_audit = is_validator & (val_ord < n_cand)
+    # validator spot checks — audit-age-weighted CHOOSETARGET
+    # (:func:`_choose_targets`, shared with the hierarchical core)
+    target, valid_audit, is_validator, target_hot, audited = _choose_targets(
+        cfg, state, active_b
+    )
 
     grad_mismatch = jnp.any(G != honest_G, axis=1)  # commitment recompute
     row_tol = 1e-4 * (1.0 + jnp.abs(true_s).max(axis=1))
@@ -481,9 +559,7 @@ def phase_verify(cfg, state, G, honest_G, agg, honest_agg, parts, s_tbl,
     val_accuse = is_validator & ~byz & caught & valid_audit
     if cfg.false_accuse:
         val_accuse = val_accuse | (is_validator & byz & att & valid_audit)
-    target_hot = jax.nn.one_hot(target, n, dtype=bool)
     accuse = accuse | (target_hot & val_accuse[:, None])
-    audited = (target_hot & valid_audit[:, None]).any(axis=0)
     last_checked = jnp.where(audited, state.step, state.last_checked)
 
     # accusations only flow between active peers
@@ -534,6 +610,150 @@ def phase_accuse_ban(cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
     return new_active, banned_now, reason, cheated, accused.astype(jnp.int32)
 
 
+def phase_hier(cfg, state, byz, weights, seed, G, G_cmp, honest_G_cmp,
+               samp_mask, mprng_ban):
+    """The hierarchical butterfly-of-butterflies verifiable core:
+    aggregation + aggregator attack + misreport + verify + accuse/ban in
+    the two-level topology (core.hierarchy).
+
+    Level 1: each group of gs = n/groups peers runs the full spec over its
+    own butterfly — tables are gs x gs PER GROUP, broadcast within the
+    group only. Level 2: the linear leader combine with its always-on
+    zero-sum checksum; a violated super-partition implicates its group's
+    leader, so bans propagate through the group digests. Accusations stay
+    peer x peer (n, n) — level-1 blocks scatter block-diagonally — so
+    :func:`phase_accuse_ban` and the whole ban machinery run unchanged
+    over the hier shapes. ``samp_mask`` (n,) composes the sampled-digest
+    mode in: global cell (a, c) guards column c of group a's tables
+    (cell index == owner peer id, both levels of masking agree).
+
+    Returns the same tail tuple the flat verifiable branch produces, plus
+    the global aggregate in the standard (n_parts, part) layout.
+    """
+    n = cfg.n
+    g, gs = hier_mod.group_shape(n, cfg.groups)
+    active = state.active
+    active_b = active > 0
+    att = _attacking(cfg, state.step)
+    spec = cfg.agg_spec()
+
+    attacking_agg = bool(cfg.aggregator_attack and cfg.aggregator_scale > 0)
+    v0_flat = None
+    if spec.warm_startable and spec.get("warm_start", False):
+        v0_flat = jnp.where(
+            state.step > 0, bf.merge_parts(state.prev_agg, cfg.d), 0.0
+        )
+    h = hier_mod.hier_aggregate(
+        spec, G, weights, seed, cfg.groups, v0_flat=v0_flat,
+        with_tables=not attacking_agg,
+    )
+    u, s1, norms1 = h.u, h.s1, h.norms1
+    part1 = u.shape[-1]
+    corrupt = jnp.zeros((n,), bool)
+    if attacking_agg:
+        # cell (a, r) of the level-1 aggregate is owned by peer a*gs + r,
+        # so the flat (n,)-masked shift applies to the (n, part1) reshape
+        corrupt = byz & active_b & att
+        u = attacks_mod.aggregator_shift_all(
+            u.reshape(n, part1), corrupt, _phase_key(state, 3),
+            cfg.aggregator_scale,
+        ).reshape(u.shape)
+        s1, norms1 = hier_mod.hier_tables(spec, h.parts1, u, h.z1)
+
+    wg = weights.reshape(g, gs)
+    if samp_mask is not None:
+        samp_h = samp_mask.reshape(g, gs)
+        s1 = jnp.where(samp_h[:, None, :], s1, 0.0)
+        norms1 = jnp.where(samp_h[:, None, :], norms1, 0.0)
+    true_s1, true_norm1 = s1, norms1
+    # per-group misreport: each group's first active colluder cancels its
+    # group's checksum for the corrupted columns (vmapped flat phase)
+    s1 = jax.vmap(
+        lambda s, c, b, a, w: phase_misreport(cfg, s, c, b, a, w)
+    )(s1, corrupt.reshape(g, gs), byz.reshape(g, gs),
+      active.reshape(g, gs), wg)
+
+    # level 2: combine the (possibly corrupted) group aggregates — honest
+    # leaders relay faithfully, so reported == recomputed at level 2 and
+    # the always-on linear checksum is the alarm that a group-level
+    # corruption reached the global aggregate
+    lvl2 = hier_mod.level2_combine(u, h.group_w, cfg.d, seed)
+    v_flat = bf.merge_parts(lvl2.v2, cfg.d)
+    agg_std = bf.split_parts(v_flat[None, :], cfg.n_parts)[0]
+
+    # ---- verify: V1/V2/V3 per group + level-2 checksum + audits ----------
+    tol_n1 = 1e-4 * (1.0 + true_norm1)
+    tol_s1 = 1e-4 * (1.0 + jnp.abs(true_s1))
+    mm_norm = jnp.abs(norms1 - true_norm1) > tol_n1  # (g, peer_r, col_c)
+    mm_s = jnp.abs(s1 - true_s1) > tol_s1
+
+    idx = jnp.arange(n).reshape(g, gs)
+    agg_ok_g = (active_b & ~byz).reshape(g, gs)
+    acc_blocks = agg_ok_g[:, :, None] & jnp.swapaxes(mm_norm | mm_s, 1, 2)
+    accuse = jnp.zeros((n, n), bool).at[
+        idx[:, :, None], idx[:, None, :]
+    ].set(acc_blocks)
+    mismatch_s = jnp.zeros((n, n), bool).at[
+        idx[:, :, None], idx[:, None, :]
+    ].set(mm_s)
+
+    if verif_mod.has_zero_checksum(spec):
+        cs_tol = jax.vmap(bf.checksum_tolerance)(u, h.parts1)  # (g,)
+        sums1 = (s1 * wg[:, :, None]).sum(1)  # (g, gs) per group column
+        sys_accuse = (jnp.abs(sums1) > cs_tol[:, None]).reshape(n)
+    else:
+        sys_accuse = jnp.zeros((n,), bool)
+    cs2_tol = bf.checksum_tolerance(lvl2.v2, lvl2.parts2)
+    sums2 = (lvl2.s2 * h.group_w[:, None]).sum(0)  # (g,)
+    leader_accuse = jnp.zeros((n,), bool).at[jnp.arange(g) * gs].set(
+        jnp.abs(sums2) > cs2_tol
+    )
+    sys_accuse = sys_accuse | leader_accuse
+    checksum_violations = sys_accuse.sum().astype(jnp.int32)
+
+    check_averaging = jnp.asarray(0, jnp.int32)
+    if cfg.delta_max is not None:
+        # group-majority Delta_max vote over the group's weight mass
+        votes = ((true_norm1 > cfg.delta_max) * wg[:, :, None]).sum(1)
+        v3 = (votes > wg.sum(axis=1, keepdims=True) / 2.0).reshape(n)
+        check_averaging = v3.sum().astype(jnp.int32)
+        sys_accuse = sys_accuse | v3
+
+    # validator CHOOSETARGET audit — a FULL-peer recompute, independent of
+    # digest sampling and of the topology: the backstop that keeps
+    # gradient-attack time-to-ban flat under both axes
+    target, valid_audit, is_validator, target_hot, audited = _choose_targets(
+        cfg, state, active_b
+    )
+    grad_mismatch = jnp.any(G_cmp != honest_G_cmp, axis=1)
+    s_h, true_s_h = s1.reshape(n, gs), true_s1.reshape(n, gs)
+    row_tol = 1e-4 * (1.0 + jnp.abs(true_s_h).max(axis=1))
+    s_row_mismatch = jnp.abs(s_h - true_s_h).max(axis=1) > row_tol
+    u_n, honest_u_n = u.reshape(n, part1), h.u.reshape(n, part1)
+    agg_mismatch = jnp.any(u_n != honest_u_n, axis=1)
+    caught = (grad_mismatch[target] | s_row_mismatch[target]
+              | agg_mismatch[target])
+    val_accuse = is_validator & ~byz & caught & valid_audit
+    if cfg.false_accuse:
+        val_accuse = val_accuse | (is_validator & byz & att & valid_audit)
+    accuse = accuse | (target_hot & val_accuse[:, None])
+    last_checked = jnp.where(audited, state.step, state.last_checked)
+
+    accuse = accuse & active_b[:, None] & active_b[None, :]
+    sys_accuse = sys_accuse & active_b
+
+    # ---- accuse / ban (the flat machinery over the hier shapes) ----------
+    (new_active, banned_now, reason, cheated,
+     accused_inc) = phase_accuse_ban(
+        cfg, state, accuse, sys_accuse, mismatch_s, mprng_ban,
+        G_cmp, honest_G_cmp, u_n, honest_u_n, s_h, true_s_h,
+        norms1.reshape(n, gs), true_norm1.reshape(n, gs),
+    )
+    return (new_active, banned_now, reason, cheated, accused_inc, accuse,
+            sys_accuse, checksum_violations, check_averaging, last_checked,
+            agg_std, h.iters)
+
+
 def _elect(cfg: EngineConfig, key, active):
     """Next step's validators: m uniform draws without replacement over the
     active peers, never all of them (Alg. 1 L19 keeps >= 1 contributor)."""
@@ -576,11 +796,40 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
     # ---- MPRNG (shared seed + abort bans) --------------------------------
     seed, mprng_ban = phase_mprng(cfg, state, byz)
 
-    # ---- aggregation (spec-dispatched, + tables when verifiable) ---------
-    agg, parts, z, s_tbl, norm_tbl, iters_used = phase_aggregation(
-        cfg, state, G, weights, seed
-    )
-    if spec.verifiable:
+    # ---- sampled-digest column set (public fold of the step key) ---------
+    # cell index == digest column == owner peer id, flat AND hierarchical
+    # (hier cell (a, c) = peer a*gs + c), so one (n,) ledger serves both
+    sampling = spec.verifiable and cfg.audit_k is not None
+    if sampling:
+        samp_idx, samp_mask = hier_mod.sample_audit_cells(
+            _phase_key(state, 6), state.step, state.col_checked,
+            cfg.m_validators, cfg.audit_k, cfg.n,
+        )
+        col_checked = jnp.where(samp_mask, state.step, state.col_checked)
+    else:
+        samp_idx, samp_mask = None, None
+        col_checked = jnp.full((cfg.n,), state.step, jnp.int32)
+
+    if spec.verifiable and cfg.hierarchical:
+        # ---- hierarchical butterfly-of-butterflies core ------------------
+        if comp_mod.is_wrapped(spec):
+            # wire partitions follow the level-1 butterfly: gs per group
+            codec = comp_mod.codec_of(spec)
+            gs = cfg.n // cfg.groups
+            G_cmp = comp_mod.wire_grads(G, codec, gs)
+            honest_G_cmp = comp_mod.wire_grads(honest_G, codec, gs)
+        else:
+            G_cmp, honest_G_cmp = G, honest_G
+        (new_active, banned_now, reason, cheated, accused_inc, accuse,
+         sys_accuse, cs_viol, chk_avg, last_checked, agg,
+         iters_used) = phase_hier(
+            cfg, state, byz, weights, seed, G, G_cmp, honest_G_cmp,
+            samp_mask, mprng_ban,
+        )
+    elif spec.verifiable:
+        agg, parts, z, s_tbl, norm_tbl, iters_used = phase_aggregation(
+            cfg, state, G, weights, seed, samp_idx
+        )
         # compressed:* specs: every peer commits to (and validators
         # recompute) the WIRE payload, not the raw f32 gradient — so the
         # commitment comparisons in verify/accuse must run over the wire
@@ -597,7 +846,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         else:
             G_cmp, honest_G_cmp = G, honest_G
         agg, honest_agg, corrupt, s2, n2 = phase_aggregator_attack(
-            cfg, state, agg, parts, z, byz, weights
+            cfg, state, agg, parts, z, byz, weights, samp_idx
         )
         if s_tbl is None:
             s_tbl, norm_tbl = s2, n2
@@ -619,6 +868,9 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
             true_norm,
         )
     else:
+        agg, parts, z, s_tbl, norm_tbl, iters_used = phase_aggregation(
+            cfg, state, G, weights, seed
+        )
         # non-verifiable aggregator: no tables -> no verification, no
         # accusations, no bans (incl. the MPRNG abort rule, which is part
         # of the same commit/reveal machinery). The attack still lands in
@@ -658,6 +910,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         ban_reason=jnp.where(banned_now, reason, state.ban_reason),
         accused_count=state.accused_count + accused_inc,
         last_checked=last_checked,
+        col_checked=col_checked,
         delay_buf=delay_buf,
     )
     out = StepOutputs(
@@ -673,6 +926,8 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         n_active=active.sum().astype(jnp.int32),
         validators=validator,
         clip_iters_used=iters_used,
+        sampled_parts=(samp_mask if sampling
+                       else jnp.ones((cfg.n,), bool)),
     )
     return new_state, out
 

@@ -1,0 +1,256 @@
+"""Flat-cost verification at n >~ 1000 — sampled-digest audits + the
+hierarchical butterfly-of-butterflies.
+
+Alg. 6 broadcasts O(n^2) digest scalars per step: every peer reports an
+n-column (s, norm) row and receives everyone else's. Fine at n=16, but the
+tables dominate wire bytes long before the internet-scale membership the
+paper targets. Two composable axes shrink them, both engine- and
+launch-path backed:
+
+* **Sampled-digest auditing** (``EngineConfig.audit_k`` / ``--audit-k``):
+  the m validators jointly audit only ``k_tot = m * audit_k`` digest
+  COLUMNS (partitions) per step instead of all n. The sampled set is drawn
+  from the step's MPRNG key with the same age + U(0,1) priority rule
+  CHOOSETARGET uses for peers, so it is
+
+  - *unpredictable* before the seed reveal — a cheater cannot steer its
+    misreport into a column it knows is unsampled this step;
+  - *recomputable* by every peer after the reveal — the sampled mask is a
+    pure function of (key, step, col ages), so the shrunken tables stay a
+    shared public object and accusations resolve exactly as before;
+  - *coverage-bounded* — the top-k_tot-by-age rule guarantees every
+    column's audit age stays below :func:`staleness_bound` (property-
+    tested in tests/test_sampled_hier.py), so a misreport in an unsampled
+    column is caught within that window, never lost.
+
+  Broadcast rows shrink from n to k_tot scalars per table; the per-column
+  zero-sum checksums (V2) run over the sampled columns, and the validator
+  CHOOSETARGET audit — which targets a PEER and recomputes its full work
+  from the public seed — is untouched, so time-to-ban for *gradient*
+  attacks does not depend on the digest sampling at all.
+
+* **Hierarchical butterfly-of-butterflies** (``EngineConfig.groups`` /
+  ``--groups``): n peers split into g groups of gs = n/g. Level 1 runs
+  the standard butterfly all-to-all INSIDE each group — payloads stay
+  O(d)/peer, tables shrink to gs x gs per group. Level 2 combines the
+  per-group aggregates u_a by their active-weight mean and exchanges a
+  g x g digest table between group leaders. The level-2 combine is linear
+  for ANY level-1 aggregator, so its zero-sum checksum is exact and
+  always-on — a group whose (possibly corrupted) aggregate breaks the
+  identity is flagged through its leader: bans propagate through the
+  group digests. Per-peer table traffic drops O(n^2) -> O((n/g)^2 + g^2).
+
+Both axes compose: sampling then applies within the gs-column level-1
+tables. The shared analytic wire model lives in :func:`table_scalars` —
+bench_overhead, bench_roofline and check_regression all price tables
+through this one function.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as agg_mod
+from repro.core import butterfly as bf
+from repro.core import verification as verif_mod
+
+
+# ---------------------------------------------------------------------------
+# Shapes and the sampling coverage rule
+# ---------------------------------------------------------------------------
+def group_shape(n: int, groups: int | None) -> tuple[int, int]:
+    """(g, gs) for the hierarchical topology; (1, n) when flat."""
+    if groups is None or groups <= 1:
+        return 1, n
+    if n % groups:
+        raise ValueError(
+            f"groups={groups} must divide the peer count n={n} evenly"
+        )
+    gs = n // groups
+    if gs < 2:
+        raise ValueError(
+            f"groups={groups} leaves group size {gs} < 2: nothing to "
+            "aggregate inside a group"
+        )
+    return groups, gs
+
+
+def sampled_k(n_cells: int, m_validators: int, audit_k: int) -> int:
+    """Digest columns audited per step: m validators x k columns each,
+    capped at the column count (full tables when the budget covers them)."""
+    return int(min(max(1, m_validators) * max(1, audit_k), n_cells))
+
+
+def staleness_bound(n_cells: int, m_validators: int, audit_k: int) -> int:
+    """Upper bound on any digest column's audit age under the
+    top-k_tot-by-(age + U(0,1)) rule.
+
+    A column of age a outranks every column of age <= a - 2 (scores are
+    age + U(0,1) with U < 1), so while a column waits, each step's k_tot
+    samples go to columns that were last audited no later than one step
+    after it — effectively distinct columns. Pigeonhole over the other
+    n_cells - 1 columns bounds the wait at ceil(n_cells / k_tot) + 2
+    steps; the property test (tests/test_sampled_hier.py) exercises the
+    realized ages against this bound over long runs.
+    """
+    k_tot = sampled_k(n_cells, m_validators, audit_k)
+    return math.ceil(n_cells / k_tot) + 2
+
+
+def sample_audit_cells(key, step, col_checked, m_validators: int,
+                       audit_k: int, n_cells: int):
+    """The step's public sampled digest-column set.
+
+    Same priority rule as the engine's CHOOSETARGET: score every column by
+    audit age (steps since last sampled, from the ``col_checked`` ledger)
+    plus fresh U(0,1) jitter from the step key, take the top k_tot. Age
+    dominance gives the bounded-staleness guarantee; the jitter keeps the
+    within-bound order unpredictable before the seed reveal.
+
+    Returns (idx (k_tot,) i32 sampled column ids, mask (n_cells,) bool).
+    """
+    k_tot = sampled_k(n_cells, m_validators, audit_k)
+    u = jax.random.uniform(key, (n_cells,))
+    age = (step - col_checked).astype(jnp.float32)
+    order = jnp.argsort(-(age + u))
+    idx = order[:k_tot].astype(jnp.int32)
+    mask = jnp.zeros((n_cells,), bool).at[idx].set(True)
+    return idx, mask
+
+
+# ---------------------------------------------------------------------------
+# The analytic per-peer table wire model (single source of truth)
+# ---------------------------------------------------------------------------
+def table_scalars(n: int, *, m_validators: int = 1,
+                  audit_k: int | None = None,
+                  groups: int | None = None) -> int:
+    """Verification-table scalars RECEIVED per peer per step.
+
+    Full Alg. 6: every peer receives n rows x n columns of (s, norm) pairs
+    plus 3 per-owner sidecar scalars (checksum, Delta_max vote, clip
+    iters) -> 2 n^2 + 3 n (exactly ``bench_overhead.comm_model``'s
+    btard_extra term). Sampling shrinks the column count of each received
+    row to k_tot; hierarchy shrinks the row/column space to the gs-peer
+    group and adds the level-2 leader exchange (2 g^2 + 3 g, priced at the
+    leader — the worst-case peer).
+    """
+    g, gs = group_shape(n, groups)
+    k_tot = None if audit_k is None else sampled_k(n, m_validators, audit_k)
+    cols = gs if k_tot is None else min(k_tot, gs)
+    scalars = 2 * gs * cols + 3 * gs
+    if g > 1:
+        scalars += 2 * g * g + 3 * g
+    return scalars
+
+
+def table_bytes(n: int, *, m_validators: int = 1, audit_k: int | None = None,
+                groups: int | None = None, bytes_per: int = 4) -> int:
+    """Per-peer verification-table bytes per step (f32 scalars by default)."""
+    return table_scalars(
+        n, m_validators=m_validators, audit_k=audit_k, groups=groups
+    ) * bytes_per
+
+
+# ---------------------------------------------------------------------------
+# Two-level aggregation (engine path)
+# ---------------------------------------------------------------------------
+class HierAggregate(NamedTuple):
+    """Level-1 (within-group) aggregation results."""
+
+    u: jnp.ndarray  # (g, gs, part1) per-group aggregates, butterfly layout
+    parts1: jnp.ndarray  # (g, gs, gs, part1) within-group contributions
+    z1: jnp.ndarray  # (gs, part1) level-1 directions (shared across groups)
+    s1: jnp.ndarray | None  # (g, gs, gs) level-1 digest tables
+    norms1: jnp.ndarray | None  # (g, gs, gs)
+    group_w: jnp.ndarray  # (g,) level-2 combine weights (group active mass)
+    iters: jnp.ndarray  # () i32 — max level-1 iterations over the groups
+
+
+class Level2(NamedTuple):
+    """Level-2 (leader butterfly) combine + digest exchange."""
+
+    v2: jnp.ndarray  # (g, part2) global aggregate in the leader layout
+    parts2: jnp.ndarray  # (g, g, part2) per-group contributions to level 2
+    z2: jnp.ndarray  # (g, part2)
+    s2: jnp.ndarray  # (g, g) level-2 digests
+    norms2: jnp.ndarray  # (g, g)
+
+
+def hier_aggregate(spec, grads, weights, seed, groups: int,
+                   v0_flat=None, with_tables: bool = True,
+                   use_pallas: bool = False) -> HierAggregate:
+    """Level-1 aggregation: each group of gs peers runs the full verifiable
+    spec over its own butterfly (gs partitions of the whole d).
+
+    grads (n, d); weights (n,) — already validator/ban masked; seed the
+    step's MPRNG output; v0_flat optional (d,) warm start shared by every
+    group (the previous GLOBAL aggregate — groups see iid shards of the
+    same distribution, so it seeds all of them). ``with_tables=False``
+    skips the digest pass (the aggregator-attack path recomputes tables
+    against the corrupted aggregate via :func:`hier_tables` instead).
+
+    Per-group weights differ, so the shared-weight fused kernels do not
+    apply under vmap — level-1 runs the jnp path regardless of
+    ``use_pallas`` (group sizes are small by construction; the kernel win
+    lives in the flat/sampled digest passes).
+    """
+    spec = agg_mod.resolve_spec(spec)
+    n, d = grads.shape
+    g, gs = group_shape(n, groups)
+    part1 = bf.pad_to_parts(d, gs) // gs
+    z1 = bf.get_random_directions(seed, gs, part1) if with_tables else None
+    v0_1 = None
+    if v0_flat is not None:
+        v0_1 = bf.split_parts(v0_flat[None, :], gs)[0]  # (gs, part1)
+
+    def per_group(G_a, w_a):
+        return verif_mod.spec_aggregate(
+            spec, G_a, z=z1, weights=w_a, v0=v0_1, use_pallas=False,
+        )
+
+    u, parts1, s1, norms1, iters = jax.vmap(per_group)(
+        grads.reshape(g, gs, d), weights.reshape(g, gs)
+    )
+    if z1 is None:
+        z1 = bf.get_random_directions(seed, gs, part1)
+    return HierAggregate(
+        u=u, parts1=parts1, z1=z1, s1=s1, norms1=norms1,
+        group_w=weights.reshape(g, gs).sum(axis=1),
+        iters=iters.max().astype(jnp.int32),
+    )
+
+
+def hier_tables(spec, parts1, u, z1, use_pallas: bool = False):
+    """Level-1 tables against a GIVEN (possibly corrupted) per-group
+    aggregate — the hierarchical sibling of ``verification.spec_tables``.
+    parts1 (g, gs, gs, part1); u (g, gs, part1). Returns (s1, norms1),
+    both (g, gs, gs)."""
+    spec = agg_mod.resolve_spec(spec)
+    return jax.vmap(
+        lambda p, v: verif_mod.spec_tables(spec, p, v, z1, use_pallas=False)
+    )(parts1, u)
+
+
+def level2_combine(u, group_w, d: int, seed) -> Level2:
+    """The leader butterfly: combine the g per-group aggregates by their
+    active-weight mean and digest every group's contribution against the
+    result.
+
+    The combine is LINEAR whatever aggregated level 1, so the level-2
+    zero-sum checksum sum_a W_a s2[a, b] ~= 0 holds exactly — it is
+    always-on (even for wrapped nonlinear level-1 specs) and a corrupted
+    group aggregate that survives level-1 masking breaks it at the
+    violated super-partition's leader: bans propagate through the group
+    digests. z2 derives from the same revealed seed as z1 (distinct fold).
+    """
+    g = u.shape[0]
+    u_flat = jax.vmap(lambda a: bf.merge_parts(a, d))(u)  # (g, d)
+    parts2 = bf.split_parts(u_flat, g)  # (g, g, part2)
+    w = jnp.maximum(group_w.astype(jnp.float32), 0.0)
+    v2 = (parts2 * w[:, None, None]).sum(0) / jnp.maximum(w.sum(), 1e-30)
+    z2 = bf.get_random_directions(seed + 1, g, parts2.shape[-1])
+    s2, norms2 = verif_mod.digest_tables(parts2, v2, z2)
+    return Level2(v2=v2, parts2=parts2, z2=z2, s2=s2, norms2=norms2)

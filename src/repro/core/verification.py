@@ -165,6 +165,63 @@ def digest_tables(parts, agg, z, use_pallas: bool = False):
     return s, norms  # both (n, n_parts)
 
 
+def digest_tables_rows(spec, parts, agg, z, rows, use_pallas: bool = False):
+    """SAMPLED-column digests: compute (s, norm) for only the ``rows``
+    sampled partition columns — the sampled-digest audit mode's table pass
+    (O(n * k) work and broadcast instead of O(n^2); core.hierarchy).
+
+    parts: (n, n_parts, part); agg, z: (n_parts, part); rows: (k,) i32
+    sampled partition ids. Returns (s (n, k), norms (n, k)), column j of
+    the output = partition rows[j]. Spec-aware like :func:`spec_tables`:
+    butterfly_clip applies its tau clip weight, verified:* wrappers take
+    the plain digest, compressed:* recurses to its inner spec (parts must
+    already be the dequantized-from-wire payloads). ``use_pallas`` routes
+    through the scalar-prefetch rows kernel (one HBM pass of the k sampled
+    partitions only).
+    """
+    spec = agg_mod.resolve_spec(spec)
+    if spec.name.startswith("compressed:"):
+        from repro.core import compression as _compression
+
+        return digest_tables_rows(
+            _compression.inner_spec(spec), parts, agg, z, rows,
+            use_pallas=use_pallas,
+        )
+    if spec.name == "butterfly_clip":
+        tau = float(spec.get("tau", 1.0))
+    elif is_wrapped(spec):
+        tau = 0.0
+    else:
+        raise ValueError(
+            f"aggregator {spec.name!r} is not verifiable — it has no "
+            "digest tables to sample"
+        )
+    rows = jnp.asarray(rows, jnp.int32)
+    if use_pallas:
+        from repro.kernels.ops import digest_tables_rows_op
+
+        return digest_tables_rows_op(
+            jnp.swapaxes(parts, 0, 1), agg, z, rows, tau
+        )
+
+    parts_r = jnp.take(parts, rows, axis=1)  # (n, k, part)
+    agg_r = jnp.take(agg, rows, axis=0)
+    z_r = jnp.take(z, rows, axis=0)
+
+    def per_part(xs_j, v_j, z_j):
+        diff = (xs_j - v_j[None]).astype(jnp.float32)
+        nrm = jnp.linalg.norm(diff, axis=1)
+        sj = diff @ z_j.astype(jnp.float32)
+        if tau > 0:
+            sj = jnp.minimum(1.0, tau / jnp.maximum(nrm, 1e-30)) * sj
+        return sj, nrm
+
+    s, norms = jax.vmap(per_part, in_axes=(1, 0, 0), out_axes=1)(
+        parts_r, agg_r, z_r
+    )
+    return s, norms
+
+
 def spec_tables(spec, parts, agg, z, use_pallas: bool = False):
     """Recompute a verifiable spec's broadcast tables against a GIVEN
     aggregate (the standalone path when agg changed after aggregation, e.g.

@@ -914,6 +914,102 @@ def digest_tables_batched_pallas(
     return s[:, 0], norms[:, 0]
 
 
+def _rows_digest_kernel(rows_ref, tau_ref, xs_ref, v_ref, z_ref, s_ref,
+                        norm_ref, dot_ref, sq_ref):
+    """Grid (k, n_blocks) — digests for the SAMPLED partitions rows[p] only
+    (sampled-digest audit mode: k = m_validators * audit_k columns per step
+    instead of all n_parts). The row ids ride the scalar-prefetch channel
+    and were consumed by the BlockSpec index_maps — the body never touches
+    them. tau_ref[0] > 0 applies the ButterflyClip clip weight (the sampled
+    sibling of _vt_batched_kernel); 0 emits the plain contribution digests
+    (_dg_batched_kernel), so one kernel serves every verifiable spec."""
+    del rows_ref  # consumed by the index_maps
+    blk = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _reset():
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    diff = xs_ref[0].astype(jnp.float32) - v_ref[0].astype(jnp.float32)
+    zb = z_ref[0].astype(jnp.float32)
+    dot_ref[...] += jnp.sum(diff * zb, axis=1, keepdims=True)
+    sq_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+
+    @pl.when(blk == nb - 1)
+    def _epilogue():
+        tau = tau_ref[0]
+        norms = jnp.sqrt(jnp.maximum(sq_ref[...], 0.0))
+        cw = jnp.where(
+            tau > 0.0, jnp.minimum(1.0, tau / jnp.maximum(norms, 1e-30)), 1.0
+        )
+        s_ref[0] = (cw * dot_ref[...]).reshape(s_ref.shape[1:])
+        norm_ref[0] = norms.reshape(norm_ref.shape[1:])
+
+
+def digest_tables_rows_pallas(
+    parts, agg, z, rows, tau=0.0, *, block: int = DEFAULT_BLOCK,
+    interpret: bool = True
+):
+    """Sampled-column digest tables in one pass of the SAMPLED partitions.
+
+    parts: (n_parts, n, part); agg, z: (n_parts, part); rows: (k,) i32
+    sampled partition ids; tau: scalar — > 0 applies the ButterflyClip clip
+    weight min(1, tau/||diff||), 0 emits the plain verified:* digests.
+    Returns (s (k, n), norms (k, n)), column p of the output = partition
+    rows[p].
+
+    The row ids are a scalar-prefetch operand (SMEM), so every BlockSpec
+    index_map picks its partition block dynamically — HBM traffic is
+    O(k * n * part), not O(n_parts * n * part): the kernel-side half of the
+    sampled-digest cost model.
+    """
+    n_parts, n, d = parts.shape
+    k = rows.shape[0]
+    blk = min(block, max(128, d))
+    dp = -(-d // blk) * blk
+    if dp != d:
+        parts = jnp.pad(parts, ((0, 0), (0, 0), (0, dp - d)))
+        agg = jnp.pad(agg, ((0, 0), (0, dp - d)))
+        z = jnp.pad(z, ((0, 0), (0, dp - d)))
+    n_blocks = dp // blk
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(k, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, n, blk), lambda p, b, rows, tau: (rows[p], 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b, rows, tau: (rows[p], 0, b)),
+            pl.BlockSpec((1, 1, blk), lambda p, b, rows, tau: (rows[p], 0, b)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n), lambda p, b, rows, tau: (p, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda p, b, rows, tau: (p, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n, 1), jnp.float32),
+            pltpu.VMEM((n, 1), jnp.float32),
+        ],
+    )
+    s, norms = pl.pallas_call(
+        _rows_digest_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(rows, jnp.int32),
+        jnp.asarray(tau, jnp.float32).reshape(1),
+        parts,
+        agg.reshape(n_parts, 1, dp),
+        z.reshape(n_parts, 1, dp),
+    )
+    return s[:, 0], norms[:, 0]
+
+
 def _md_kernel(w_ref, xs_ref, z_ref, out_ref, s_ref, norm_ref, dot_ref,
                sq_ref, *, scales_ref=None):
     """Grid (n_parts, 2, n_blocks) — fused weighted mean + digest epilogue.

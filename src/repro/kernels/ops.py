@@ -173,6 +173,22 @@ def digest_tables_all_op(parts, agg, z, *, block: int = _k.DEFAULT_BLOCK):
 
 
 @functools.partial(jax.jit, static_argnames=("block",))
+def digest_tables_rows_op(parts, agg, z, rows, tau=0.0, *,
+                          block: int = _k.DEFAULT_BLOCK):
+    """Kernel-backed SAMPLED-column digests (sampled-digest audit mode):
+    parts (n_parts, n_peers, part), rows (k,) i32 sampled partition ids ->
+    (s (n_peers, k), norms (n_peers, k)) — transposed to the
+    (peer, column) layout of core.verification.digest_tables, column p of
+    the output = partition rows[p]. tau > 0 applies the ButterflyClip clip
+    weight; tau == 0 emits the plain verified:* digests. One HBM pass of
+    the k sampled partitions only (scalar-prefetched row ids)."""
+    s, norms = _k.digest_tables_rows_pallas(
+        parts, agg, z, rows, tau, block=block, interpret=_INTERPRET
+    )
+    return s.T, norms.T
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
 def mean_digest_fused_op(parts, z, weights=None, *, block: int = _k.DEFAULT_BLOCK):
     """verified:mean's fused aggregation + digest epilogue in ONE
     pallas_call (2 HBM passes of the stacked partitions, zero materialized

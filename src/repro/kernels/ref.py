@@ -140,6 +140,24 @@ def mean_digest_fused_dequant_ref(qs, scales, z, weights=None):
     return mean_digest_fused_ref(dequantize_ref(qs, scales), z, weights)
 
 
+def digest_tables_rows_ref(parts, agg, z, rows, tau=0.0):
+    """Reference sampled-column digests (sampled-digest audit mode): for
+    each sampled partition id j in ``rows``, the per-peer digests against
+    that partition's aggregate — verify_tables_ref when tau > 0
+    (ButterflyClip clip weight), digest_tables_ref when tau == 0 (the
+    verified:* wrappers). parts: (n_parts, n, part); agg, z:
+    (n_parts, part); rows: (k,) i32. Returns (s (k, n), norms (k, n)) f32.
+    """
+    xs = jnp.take(parts, rows, axis=0)
+    v = jnp.take(agg, rows, axis=0)
+    zr = jnp.take(z, rows, axis=0)
+    if tau > 0:
+        return jax.vmap(
+            lambda x, vv, zz: verify_tables_ref(x, vv, zz, tau)
+        )(xs, v, zr)
+    return jax.vmap(digest_tables_ref)(xs, v, zr)
+
+
 def verify_tables_ref(xs, v, z, tau):
     """Reference fused verification scalars.
 

@@ -160,7 +160,8 @@ def _collapse_peer_mesh(mesh):
 
 def aggregation_stage(
     g_vec, peer_axes, n_peers, spec, weights, seed, use_pallas=False,
-    delta_max=None, v0_full=None, gather_axes=(),
+    delta_max=None, v0_full=None, gather_axes=(), groups=None,
+    audit_k=None, agg_attack_scale=None, byz_mask=None, audit_grad=None,
 ):
     """Fully-manual-region robust all-reduce of one local gradient vector,
     dispatched by :class:`~repro.core.aggregators.AggregatorSpec`. Returns
@@ -212,6 +213,40 @@ def aggregation_stage(
     in the manual region because the loop body contains no collectives;
     the verification tables are computed exactly once against the final
     iterate, so the broadcast protocol is budget-oblivious.
+
+    Flat-cost verification axes (core.hierarchy — verifiable specs only):
+
+    ``groups=g`` runs the butterfly-of-butterflies: the peer axis splits
+    into g groups of gs = n/g via ``axis_index_groups`` (one manual mesh
+    axis, two collective scopes). Level 1 is the ordinary butterfly WITHIN
+    each group — gs partitions of size d/gs, owner = member index, digests
+    against the group aggregate — so per-peer table traffic is O(gs^2)
+    instead of O(n^2). Level 2 combines the g group aggregates by
+    active-weight mean with a grouped psum at fixed member index (linear —
+    the zero-sum checksum identity holds exactly for ANY base), and each
+    group reconstructs the same full vector from its own level-1 gather.
+
+    ``audit_k=k`` is sampled-digest mode: only the k owner columns in this
+    step's rotating window (start = seed mod n) broadcast digests; every
+    other owner ships zeros. Because checksum and votes are computed FROM
+    the zeroed digests, the ban policy is silent at unsampled columns by
+    construction (the zero-scatter invariant) — table bytes drop to
+    O(n*k) while the rotating window bounds every column's audit staleness
+    by n/k full cycles. Composes with ``groups``.
+
+    ``agg_attack_scale`` + ``byz_mask`` simulate the LYING OWNER: a
+    Byzantine partition owner corrupts its aggregate after aggregating and
+    reports digests recomputed against the corrupted value — perfectly
+    self-consistent tables, undetectable by the V1 mismatch rule. The
+    validator audit arm (always on for verifiable specs) is what catches
+    it: the shared seed elects one owner column per step, every validator
+    recomputes that partition's aggregation from the same payloads, and
+    the max deviation from the broadcast value is reported per peer in
+    ``audit_agg_mismatch`` (exact zero for honest owners). ``audit_grad``
+    threads the analogous gradient-recompute deviation from the caller
+    (the payload audit — see _build_btard_step); both feed the host ban
+    policy, closing the loop for nonlinear verified:* specs whose digests
+    carry no checksum.
     """
     spec = resolve_spec(spec)
     d = g_vec.shape[0]
@@ -243,17 +278,40 @@ def aggregation_stage(
             "clip_iters": jnp.asarray(info.iters, jnp.int32)[None],
             "s_table": jnp.zeros((n_peers, n_peers), jnp.float32),
             "norm_table": jnp.zeros((n_peers, n_peers), jnp.float32),
+            # the trusted-PS model has no audit protocol — zeros keep the
+            # verif tree uniform across specs
+            "audit_target": jnp.zeros((1,), jnp.int32),
+            "audit_grad_mismatch": jnp.zeros((1,), jnp.float32),
+            "audit_agg_mismatch": jnp.zeros((1,), jnp.float32),
         }
         return flat.astype(jnp.float32), verif
 
     from repro.core import compression as comp_mod
     from repro.core import verification as verif_mod
 
-    part = -(-d // n_peers)
-    pad = part * n_peers - d
+    my_idx = jax.lax.axis_index(peer_axes)
+    hier = groups is not None and groups > 1
+    if hier:
+        from repro.core.hierarchy import group_shape
+
+        n_groups, gs = group_shape(n_peers, groups)
+        lvl1_groups = [[a * gs + c for c in range(gs)] for a in range(n_groups)]
+        lvl2_groups = [[a * gs + c for a in range(n_groups)] for c in range(gs)]
+        my_group = my_idx // gs
+        fold_idx = my_idx % gs  # member index == level-1 partition owner
+        n_loc = gs
+        # the owner aggregates its GROUP's payloads with the group's weights
+        weights = jnp.take(weights.reshape(n_groups, gs), my_group, axis=0)
+    else:
+        lvl1_groups = lvl2_groups = None
+        fold_idx = my_idx
+        n_loc = n_peers
+
+    part = -(-d // n_loc)
+    pad = part * n_loc - d
     if pad:
         g_vec = jnp.concatenate([g_vec, jnp.zeros((pad,), g_vec.dtype)])
-    x = g_vec.reshape(n_peers, part)
+    x = g_vec.reshape(n_loc, part)
     # each peer receives everyone's copy of ITS partition. The barrier pins
     # the transport dtype: without it XLA hoists the downstream f32 upcast
     # ahead of the collective, silently undoing bf16 transport (§Perf H3)
@@ -270,10 +328,12 @@ def aggregation_stage(
         codec = comp_mod.codec_of(spec)
         wire, scales = comp_mod.quantize(x, codec)  # (n, part), (n,) f32
         recv_w = jax.lax.all_to_all(
-            wire, peer_axes, split_axis=0, concat_axis=0, tiled=True
+            wire, peer_axes, split_axis=0, concat_axis=0, tiled=True,
+            axis_index_groups=lvl1_groups,
         )
         recv_s = jax.lax.all_to_all(
-            scales, peer_axes, split_axis=0, concat_axis=0, tiled=True
+            scales, peer_axes, split_axis=0, concat_axis=0, tiled=True,
+            axis_index_groups=lvl1_groups,
         )
         recv_w, recv_s = jax.lax.optimization_barrier((recv_w, recv_s))
         comp_wire = (recv_w, recv_s)
@@ -281,16 +341,17 @@ def aggregation_stage(
         spec = comp_mod.inner_spec(spec)  # dispatch below is by inner spec
     else:
         recv = jax.lax.all_to_all(
-            x, peer_axes, split_axis=0, concat_axis=0, tiled=True
+            x, peer_axes, split_axis=0, concat_axis=0, tiled=True,
+            axis_index_groups=lvl1_groups,
         )
         recv = jax.lax.optimization_barrier(recv)
 
     # --- z for the verification tables (Alg. 6): derived from the shared
     # MPRNG seed, folded by partition owner index; commitments are host-side
     # (protocol). Known before the aggregation runs, so the fused kernel can
-    # emit the tables from its epilogue pass.
-    my_idx = jax.lax.axis_index(peer_axes)
-    z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), my_idx), (part,))
+    # emit the tables from its epilogue pass. Hierarchical mode folds by
+    # MEMBER index: z is shared across groups (core.hierarchy's z1).
+    z = jax.random.normal(jax.random.fold_in(jax.random.key(seed), fold_idx), (part,))
     z = z / jnp.maximum(jnp.linalg.norm(z), 1e-30)
 
     if verif_mod.is_wrapped(spec):
@@ -302,10 +363,13 @@ def aggregation_stage(
             spec, recv, z, weights, use_pallas=use_pallas,
             key=jax.random.key(seed), wire=comp_wire,
         )
-        return _emit_tables(
-            g_vec, d, pad, agg, s_local, norms_local, iters_used, weights,
-            peer_axes, delta_max,
-            with_checksum=verif_mod.has_zero_checksum(spec),
+        tau_v = 0.0
+        with_checksum = verif_mod.has_zero_checksum(spec)
+        return _verify_audit_tail(
+            g_vec, d, pad, recv, agg, s_local, norms_local, iters_used,
+            weights, peer_axes, delta_max, z, seed, n_peers, n_loc, fold_idx,
+            my_idx, tau_v, with_checksum, lvl1_groups, lvl2_groups, audit_k,
+            agg_attack_scale, byz_mask, audit_grad,
         )
 
     p = spec.param_dict()
@@ -318,7 +382,7 @@ def aggregation_stage(
             v0_full = jnp.concatenate(
                 [v0_full, jnp.zeros((pad,), v0_full.dtype)]
             )
-        v0 = v0_full.reshape(n_peers, part)[my_idx].astype(jnp.float32)
+        v0 = v0_full.reshape(n_loc, part)[fold_idx].astype(jnp.float32)
 
     iters_used = jnp.asarray(clip_iters, jnp.int32)
     if adaptive_tol is not None and use_pallas:
@@ -368,37 +432,134 @@ def aggregation_stage(
         s_local = deltas @ z  # (n_peers,) — s_i^{my partition}
         norms_local = jnp.linalg.norm(recv.astype(jnp.float32) - agg[None], axis=1)
 
+    return _verify_audit_tail(
+        g_vec, d, pad, recv, agg, s_local, norms_local, iters_used, weights,
+        peer_axes, delta_max, z, seed, n_peers, n_loc, fold_idx, my_idx,
+        float(tau), True, lvl1_groups, lvl2_groups, audit_k,
+        agg_attack_scale, byz_mask, audit_grad,
+    )
+
+
+def _verify_audit_tail(
+    g_vec, d, pad, recv, agg, s_local, norms_local, iters_used, weights,
+    peer_axes, delta_max, z, seed, n_peers, n_loc, fold_idx, my_idx, tau_v,
+    with_checksum, lvl1_groups, lvl2_groups, audit_k, agg_attack_scale,
+    byz_mask, audit_grad,
+):
+    """Shared post-aggregation tail of the verifiable butterfly paths:
+    lying-owner simulation, validator audit, sampled-column masking, then
+    the table broadcast (:func:`_emit_tables`)."""
+    # --- aggregator-shift attack (the lying owner): the Byzantine owner
+    # corrupts its partition aggregate AFTER aggregating and recomputes its
+    # digests against the corrupted value — self-consistent tables, so the
+    # V1 mismatch rule never fires; detection falls to the V2 checksum
+    # (linear specs) or the validator audit below (any spec).
+    agg_honest = agg
+    if agg_attack_scale is not None and byz_mask is not None:
+        is_byz = byz_mask[my_idx] > 0
+        rms = jnp.linalg.norm(agg) / jnp.sqrt(jnp.float32(agg.shape[0]))
+        agg = jnp.where(is_byz, agg + agg_attack_scale * (rms + 1e-8), agg)
+        diff = recv.astype(jnp.float32) - agg[None]
+        n_att = jnp.linalg.norm(diff, axis=1)
+        dots = diff @ z.astype(jnp.float32)
+        if tau_v > 0:
+            s_att = jnp.minimum(1.0, tau_v / jnp.maximum(n_att, 1e-30)) * dots
+        else:
+            s_att = dots
+        s_local = jnp.where(is_byz, s_att, s_local)
+        norms_local = jnp.where(is_byz, n_att, norms_local)
+
+    # --- validator audit arm (launch-side CHOOSETARGET): the shared seed
+    # elects one owner column per step; validators recompute that column's
+    # aggregation from the same payloads (bit-identical here — agg_honest
+    # IS that recompute) and report the max deviation of the value the
+    # owner actually broadcast. Exact zero for honest owners.
+    t_col = jnp.mod(jnp.asarray(seed, jnp.int32), n_loc)
+    audit_agg = jnp.where(
+        fold_idx == t_col,
+        jnp.max(jnp.abs(agg.astype(jnp.float32)
+                        - agg_honest.astype(jnp.float32))),
+        0.0,
+    )
+
+    # --- sampled-digest masking: only the audit_k owner columns in this
+    # step's rotating window broadcast digests; everyone else ships zeros.
+    # checksum/votes below are computed FROM the zeroed digests, so the ban
+    # policy is silent at unsampled columns by construction (the
+    # zero-scatter invariant — core.hierarchy).
+    if audit_k is not None:
+        k_tot = min(int(audit_k), n_loc)
+        sampled_me = jnp.mod(fold_idx - jnp.asarray(seed, jnp.int32), n_loc) < k_tot
+        s_local = jnp.where(sampled_me, s_local, 0.0)
+        norms_local = jnp.where(sampled_me, norms_local, 0.0)
+
+    extra = {
+        "audit_target": jnp.mod(jnp.asarray(seed, jnp.int32), n_peers)[None],
+        "audit_grad_mismatch": (
+            jnp.zeros((1,), jnp.float32) if audit_grad is None
+            else jnp.asarray(audit_grad, jnp.float32)[None]
+        ),
+        "audit_agg_mismatch": jnp.asarray(audit_agg, jnp.float32)[None],
+    }
     return _emit_tables(
         g_vec, d, pad, agg, s_local, norms_local, iters_used, weights,
-        peer_axes, delta_max, with_checksum=True,
+        peer_axes, delta_max, with_checksum=with_checksum,
+        lvl1_groups=lvl1_groups, lvl2_groups=lvl2_groups, extra_verif=extra,
     )
 
 
 def _emit_tables(g_vec, d, pad, agg, s_local, norms_local, iters_used,
-                 weights, peer_axes, delta_max, with_checksum=True):
+                 weights, peer_axes, delta_max, with_checksum=True,
+                 lvl1_groups=None, lvl2_groups=None, extra_verif=None):
     """Shared table-broadcast tail of the verifiable butterfly paths:
     checksum/Delta_max votes from the owner's local tables, the O(n^2)
     scalar table all_gathers, and the aggregated-partition all_gather.
     ``with_checksum=False`` (nonlinear verified:* specs — no zero-sum
     identity) reports a zero checksum so the launch-side ban policy never
-    fires on honest finite-precision residue."""
+    fires on honest finite-precision residue.
+
+    Hierarchical mode (``lvl1_groups``/``lvl2_groups`` set): the owner's
+    digest row IS its table row — each peer emits its (gs,) digests under a
+    peer-axis out spec, so global table traffic is n*gs scalars instead of
+    n^2. The level-2 combine is the active-weight mean of the g group
+    aggregates, evaluated by grouped psum at fixed member index (linear in
+    the group aggregates, so the zero-sum checksum identity is exact for
+    ANY base); each group then reconstructs the same full vector from its
+    own level-1 all_gather."""
     if with_checksum:
         checksum = jnp.abs((s_local * weights).sum())
     else:
         checksum = jnp.zeros(())
     votes = ((norms_local > delta_max) * weights).sum() if delta_max is not None else jnp.zeros(())
-    # broadcast the scalar tables (O(n^2) data total — size-independent)
-    s_table = jax.lax.all_gather(s_local, peer_axes)  # (n_parts, n_peers)
-    norm_table = jax.lax.all_gather(norms_local, peer_axes)
-
-    full = jax.lax.all_gather(
-        agg.astype(g_vec.dtype), peer_axes, tiled=True
-    ).astype(jnp.float32)  # (n_peers*part,) — gather in the transport dtype
+    if lvl1_groups is not None:
+        # hierarchical: per-peer (gs,) table rows (n*gs scalars globally)
+        s_table = s_local[None]
+        norm_table = norms_local[None]
+        w_grp = weights.sum()  # this group's active weight W_a
+        num = jax.lax.psum(
+            w_grp * agg.astype(jnp.float32), peer_axes,
+            axis_index_groups=lvl2_groups,
+        )
+        den = jax.lax.psum(w_grp, peer_axes, axis_index_groups=lvl2_groups)
+        v2 = num / jnp.maximum(den, 1e-30)
+        full = jax.lax.all_gather(
+            v2.astype(g_vec.dtype), peer_axes, tiled=True,
+            axis_index_groups=lvl1_groups,
+        ).astype(jnp.float32)  # (gs*part,) == padded d, same in every group
+    else:
+        # broadcast the scalar tables (O(n^2) data total — size-independent)
+        s_table = jax.lax.all_gather(s_local, peer_axes)  # (n_parts, n_peers)
+        norm_table = jax.lax.all_gather(norms_local, peer_axes)
+        full = jax.lax.all_gather(
+            agg.astype(g_vec.dtype), peer_axes, tiled=True
+        ).astype(jnp.float32)  # (n_peers*part,) — gather in transport dtype
     if pad:
         full = full[:d]
     # checksum/votes are per-partition (expand-dims -> peer-axis out spec);
     # the gathered s/norm tables are the SAME on every peer (the broadcast)
-    # so they leave the region as replicated (n_parts, n_peers) arrays.
+    # so they leave the region as replicated (n_parts, n_peers) arrays —
+    # except hierarchical mode, where each peer's row leaves under the peer
+    # axis as a global (n_peers, gs) table.
     verif = {
         "checksum": checksum[None],
         "votes": jnp.asarray(votes)[None],
@@ -406,6 +567,8 @@ def _emit_tables(g_vec, d, pad, agg, s_local, norms_local, iters_used,
         "s_table": s_table,
         "norm_table": norm_table,
     }
+    if extra_verif:
+        verif.update(extra_verif)
     return full, verif
 
 
@@ -476,6 +639,9 @@ def _build_btard_step(
     warm_start: bool = False,
     adaptive_tol: float | None = None,
     aggregator=None,
+    groups: int | None = None,
+    audit_k: int | None = None,
+    agg_attack: float | None = None,
 ):
     """Shared construction for the single-step and scanned BTARD steps.
 
@@ -485,6 +651,12 @@ def _build_btard_step(
     as defaults. The shard_map carry/specs derive from the resolved spec's
     capability flags: only a warm-startable spec with ``warm_start`` set
     threads the previous-aggregate input into the aggregation region.
+
+    ``groups`` / ``audit_k`` select the flat-cost verification axes
+    (hierarchical butterfly-of-butterflies / sampled-digest mode — see
+    :func:`aggregation_stage`); ``agg_attack`` turns on the lying-owner
+    simulation at the given shift scale. All three apply to verifiable
+    specs only.
 
     Returns (step_core, mesh, specs dict, abstract args) where
     step_core(params, opt_state, batch, step, seed, byz_mask, weights,
@@ -497,12 +669,17 @@ def _build_btard_step(
     )
     carry_v0 = spec.warm_startable and bool(spec.get("warm_start", False))
     mesh, peer_axes = _collapse_peer_mesh(mesh)
+    hier = bool(groups and groups > 1 and spec.verifiable)
     # the non-peer manual axes (model shards) — non-coordinatewise specs
     # join these inside aggregation_stage to see full-vector geometry
     model_axes = tuple(a for a in mesh.axis_names if a not in peer_axes)
     set_mesh(mesh)
     cfg = model.cfg
     n_peers = int(np.prod([mesh.shape[a] for a in peer_axes]))
+    if hier:
+        from repro.core.hierarchy import group_shape
+
+        group_shape(n_peers, groups)  # validates g | n and gs >= 2
 
     params_abs = model.abstract_params()
     # replicated over peers: param specs WITHOUT the fsdp axis
@@ -549,7 +726,24 @@ def _build_btard_step(
         # the all_to_all + all_gather volume; CenteredClip still iterates in
         # f32 (EXPERIMENTS.md §Perf H3)
         vec = _flatten_local([l[0] for l in leaves], transport_dtype)
+        vec_honest = vec
         vec = device_attack(vec, byz_mask, peer_axes, attack, key)
+        audit_grad = None
+        if spec.verifiable:
+            # gradient-recompute audit (CHOOSETARGET's payload arm): the
+            # shared seed elects one peer; validators recompute its
+            # gradient from the PUBLIC batch — bit-identical here, the
+            # pre-attack vector IS that recompute — and report the max
+            # deviation of the payload it actually sent. Exact zero for
+            # honest peers, so the host ban policy can fire on any nonzero
+            # regardless of the spec's digest linearity.
+            t_peer = jnp.mod(jnp.asarray(seed, jnp.int32), n_peers)
+            audit_grad = jnp.where(
+                jax.lax.axis_index(peer_axes) == t_peer,
+                jnp.max(jnp.abs(vec.astype(jnp.float32)
+                                - vec_honest.astype(jnp.float32))),
+                0.0,
+            )
         v0_full = None
         if carry_v0:
             # previous aggregate, flattened in the SAME leaf order as vec
@@ -557,7 +751,10 @@ def _build_btard_step(
         agg_vec, verif = aggregation_stage(
             vec, peer_axes, n_peers, spec, weights, seed,
             use_pallas=use_pallas, delta_max=delta_max, v0_full=v0_full,
-            gather_axes=model_axes,
+            gather_axes=model_axes, groups=groups if hier else None,
+            audit_k=audit_k if spec.verifiable else None,
+            agg_attack_scale=agg_attack, byz_mask=byz_mask,
+            audit_grad=audit_grad,
         )
         agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
         agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
@@ -578,8 +775,13 @@ def _build_btard_step(
                 "checksum": P(peer_axes),
                 "votes": P(peer_axes),
                 "clip_iters": P(peer_axes),
-                "s_table": P(None, None),
-                "norm_table": P(None, None),
+                # hierarchical tables leave per-peer ((n, gs) global rows);
+                # flat tables are the replicated post-broadcast (n, n)
+                "s_table": P(peer_axes, None) if hier else P(None, None),
+                "norm_table": P(peer_axes, None) if hier else P(None, None),
+                "audit_target": P(peer_axes),
+                "audit_grad_mismatch": P(peer_axes),
+                "audit_agg_mismatch": P(peer_axes),
             },
         ),
         axis_names=set(mesh.axis_names),
@@ -647,6 +849,9 @@ def make_btard_train_step(
     transport_dtype=jnp.float32,
     adaptive_tol: float | None = None,
     aggregator=None,
+    groups: int | None = None,
+    audit_k: int | None = None,
+    agg_attack: float | None = None,
 ):
     """Returns (jitted step, abstract args).
 
@@ -669,7 +874,8 @@ def make_btard_train_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=False,
-        adaptive_tol=adaptive_tol, aggregator=spec,
+        adaptive_tol=adaptive_tol, aggregator=spec, groups=groups,
+        audit_k=audit_k, agg_attack=agg_attack,
     )
 
     def train_step(params, opt_state, batch, step, seed, byz_mask, weights):
@@ -715,6 +921,9 @@ def make_btard_scan_train_step(
     aggregator=None,
     pipeline=None,
     extras=None,
+    groups: int | None = None,
+    audit_k: int | None = None,
+    agg_attack: float | None = None,
 ):
     """The BTARD train step under ``lax.scan``: ``n_scan_steps`` full rounds
     per dispatch, one compiled program, zero host sync between rounds.
@@ -745,7 +954,8 @@ def make_btard_scan_train_step(
         model, optimizer, mesh, shape, tau=tau, clip_iters=clip_iters,
         attack=attack, use_pallas=use_pallas, delta_max=delta_max,
         zero1=zero1, transport_dtype=transport_dtype, warm_start=warm_start,
-        adaptive_tol=adaptive_tol, aggregator=aggregator,
+        adaptive_tol=adaptive_tol, aggregator=aggregator, groups=groups,
+        audit_k=audit_k, agg_attack=agg_attack,
     )
     agg_shardings = _named(mesh, specs["agg"])
     # the in-scan generator is pinned REPLICATED: every peer generates the

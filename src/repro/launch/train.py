@@ -121,6 +121,30 @@ def main():
                          "verification/ban machinery. --tau and "
                          "--clip-iters fill the spec's defaults; explicit "
                          "spec params win.")
+    ap.add_argument("--groups", type=int, default=0,
+                    help="hierarchical butterfly-of-butterflies: split the "
+                         "peer axis into GROUPS groups of n/GROUPS; level-1 "
+                         "butterfly within each group (per-peer table "
+                         "traffic O((n/g)^2) instead of O(n^2)), level-2 "
+                         "active-weight mean of the group aggregates "
+                         "(exact linear checksum). Verifiable specs only; "
+                         "GROUPS must divide the peer count with >= 2 "
+                         "members per group. 0 = flat (default)")
+    ap.add_argument("--audit-k", type=int, default=0,
+                    help="sampled-digest verification: only K owner "
+                         "columns per step (a rotating seed-driven window) "
+                         "broadcast their digests — table bytes drop "
+                         "n^2 -> n*K while every column is audited within "
+                         "n/K steps. Composes with --groups (the window "
+                         "rotates within each group). 0 = every column "
+                         "every step (default)")
+    ap.add_argument("--agg-attack", type=float, default=0.0, metavar="SCALE",
+                    help="simulate the LYING AGGREGATOR: Byzantine peers "
+                         "(--byzantine) corrupt their owned partition "
+                         "aggregate by SCALE x rms after aggregating and "
+                         "report self-consistent digests; detection is via "
+                         "the V2 checksum (linear specs) or the validator "
+                         "audit arm (any verifiable spec). 0 = off")
     ap.add_argument("--warm-start-clip", action="store_true",
                     help="DEPRECATED alias for "
                          "--aggregator butterfly_clip:warm_start=true "
@@ -190,18 +214,23 @@ def main():
     # public peer_key chain INSIDE the compiled scan (same bits as the host
     # pipeline), so each dispatch moves only two (n_scan,) i32 vectors
     device_data = bool(n_scan) and not args.host_data
+    flat_cost = dict(
+        groups=args.groups or None, audit_k=args.audit_k or None,
+        agg_attack=args.agg_attack or None,
+    )
     if args.defense == "btard" and n_scan:
         step_fn, _ = make_btard_scan_train_step(
             model, opt, mesh, shape, n_scan_steps=n_scan, tau=args.tau,
             clip_iters=args.clip_iters, attack=args.attack,
             use_pallas=args.use_pallas, aggregator=agg_spec,
             pipeline=pipe if device_data else None, extras=extras,
+            **flat_cost,
         )
     elif args.defense == "btard":
         step_fn, _ = make_btard_train_step(
             model, opt, mesh, shape, tau=args.tau, clip_iters=args.clip_iters,
             attack=args.attack, use_pallas=args.use_pallas,
-            aggregator=agg_spec,
+            aggregator=agg_spec, **flat_cost,
         )
     else:
         step_fn, _ = make_baseline_train_step(model, opt, mesh, shape)
@@ -215,6 +244,32 @@ def main():
     # every peer starts active — even the Byzantine ones; bans flow from the
     # verification checksums below, never from out-of-band knowledge
     weights = jnp.ones((n_peers,), jnp.float32)
+    banned_ids = set()
+
+    def apply_bans(weights, *offender_sets):
+        new = {int(b) for s in offender_sets for b in s} - banned_ids
+        for b in new:
+            weights = weights.at[b].set(0.0)
+        if new:
+            banned_ids.update(new)
+            print(f"banned peers -> {sorted(banned_ids)}", flush=True)
+        return weights
+
+    def audit_offenders(verif, tol=1e-5):
+        """Peers whose validator audit (gradient recompute or partition-
+        aggregation recompute — steps.aggregation_stage) deviated from
+        their broadcast payloads. Honest peers report EXACT zeros (the
+        recompute is bit-identical), so any excess over float tolerance is
+        a lie; works for every verifiable spec, including the nonlinear
+        verified:* wrappers whose digests carry no zero-sum checksum."""
+        bad = set()
+        for k in ("audit_grad_mismatch", "audit_agg_mismatch"):
+            if isinstance(verif, dict) and k in verif:
+                a = np.asarray(verif[k], np.float64)
+                if a.ndim > 1:  # scan mode: catch mid-chunk audits too
+                    a = a.max(0)
+                bad |= {int(i) for i in np.nonzero(a > tol)[0]}
+        return bad
 
     print(f"arch={model.cfg.name} params={model.param_count():,} "
           f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)} "
@@ -233,6 +288,7 @@ def main():
                 clip_iters=args.clip_iters, attack=args.attack,
                 use_pallas=args.use_pallas, aggregator=agg_spec,
                 pipeline=pipe if device_data else None, extras=extras,
+                **flat_cost,
             )
         for chunk in range(0, args.steps, n_scan):
             idxs = list(range(chunk, min(chunk + n_scan, args.steps)))
@@ -257,9 +313,11 @@ def main():
             # ban policy applied between dispatches from the LAST round's
             # checksums (mid-chunk rounds share the chunk's weights)
             bad = bf.checksum_offender_peers(verif["checksum"][-1])
-            if len(bad) and args.attack != "none":
-                for b in bad:
-                    weights = weights.at[int(b)].set(0.0)
+            if not (args.attack != "none" or args.agg_attack):
+                bad = []
+            # audit-arm bans are unconditional: honest audits are exact
+            # zeros, so a nonzero mismatch is a lie whatever the flags
+            weights = apply_bans(weights, bad, audit_offenders(verif))
             if chunk % max(args.log_every, 1) == 0:
                 loss_last = float(metrics["loss"][-1])
                 print(f"step {idxs[-1]:4d} loss={loss_last:.4f}"
@@ -278,9 +336,9 @@ def main():
                 # host-side ban policy: a violated partition checksum
                 # implicates its aggregating peer (partition j <-> peer j)
                 bad = bf.checksum_offender_peers(verif["checksum"])
-                if len(bad) and args.attack != "none":
-                    for b in bad:
-                        weights = weights.at[int(b)].set(0.0)
+                if not (args.attack != "none" or args.agg_attack):
+                    bad = []
+                weights = apply_bans(weights, bad, audit_offenders(verif))
             else:
                 params, opt_state, metrics = step_fn(
                     params, opt_state, batch, jnp.int32(step)

@@ -281,6 +281,9 @@ def test_butterfly_stage_shim_warns_and_matches_aggregation_stage():
                 "clip_iters": lsteps.P("peers"),
                 "s_table": lsteps.P(None, None),
                 "norm_table": lsteps.P(None, None),
+                "audit_target": lsteps.P("peers"),
+                "audit_grad_mismatch": lsteps.P("peers"),
+                "audit_agg_mismatch": lsteps.P("peers"),
             }),
             axis_names={"peers"},
         )(g[None, :], w)

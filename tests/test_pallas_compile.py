@@ -153,6 +153,34 @@ def test_digest_tables_batched_lowers_natively():
             np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("tau", [0.0, 1.0])
+def test_digest_tables_rows_lowers_natively(tau):
+    """The sampled-digest audit kernel: one HBM pass over only the k
+    sampled partitions, their ids scalar-prefetched into SMEM to steer the
+    grid — the dynamic-index block maps are exactly what interpret mode
+    cannot validate. tau=0 is the verified:* digest, tau>0 the
+    ButterflyClip clip-weighted variant."""
+    k = 2
+    parts = _stack(27, (PARTS, N, D))
+    agg = _stack(28, (PARTS, D))
+    z = _stack(29, (PARTS, D))
+    rows = jnp.asarray([3, 1], jnp.int32)
+
+    def fn(p, a, zz, r):
+        return _k.digest_tables_rows_pallas(
+            p, a, zz, r, tau, interpret=False
+        )
+
+    out = _validate(fn, parts, agg, z, rows)
+    if out is not None:
+        ref = _k.digest_tables_rows_pallas(
+            parts, agg, z, rows, tau, interpret=True
+        )
+        for got, want in zip(out, ref):
+            assert got.shape == (k, N)
+            np.testing.assert_allclose(got, np.asarray(want), atol=1e-4)
+
+
 @pytest.mark.parametrize("weighted", [False, True])
 def test_mean_digest_fused_lowers_natively(weighted):
     """verified:mean's fused aggregation + digest-epilogue kernel (2 HBM

@@ -1,0 +1,247 @@
+"""Flat-cost verification properties (core.hierarchy + core.engine).
+
+The two axes that shrink Alg. 6's O(n^2) table broadcast — sampled-digest
+audits and the hierarchical butterfly-of-butterflies — must not weaken the
+protocol's guarantees. The load-bearing properties:
+
+* the sampled digest-column set is coverage-bounded: no column's audit age
+  ever exceeds :func:`hierarchy.staleness_bound` (the top-k-by-age rule),
+  both for the pure sampler and for the ledger the scanned engine carries;
+* a cheater whose corruption lands in an UNSAMPLED column this step is not
+  lost — it is banned as soon as its column is drawn, within the staleness
+  window;
+* honest runs stay honest: sampling and hierarchy produce zero bans and
+  zero accusations with no attack, and the sampled aggregate is the full
+  aggregate (sampling touches tables only);
+* the mode x aggregator attack grid bans exactly the Byzantine set with
+  zero honest casualties in every mode combination;
+* the analytic table model behind the bench gates: bytes shrink
+  monotonically per axis and the composed mode clears the n=1024 <= 10%
+  acceptance ceiling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import hierarchy as hier
+
+N, D = 16, 64
+BYZ = (3, 11)
+
+
+def _grads_fn(n=N, d=D):
+    """iid noise around a fixed descent direction; the engine's attack
+    phase applies the Byzantine corruption itself."""
+    mu = jax.random.normal(jax.random.key(7), (d,)) * 0.1
+
+    def grads_fn(params, t, flips):
+        key = jax.random.fold_in(jax.random.key(1), t)
+        G = mu[None] + jax.random.normal(key, (n, d), jnp.float32)
+        return G, G
+
+    return grads_fn
+
+
+def _run(steps, byz=(), **cfg_kw):
+    cfg = eng.EngineConfig(
+        n=N, d=D, tau=1.0, clip_iters=10, m_validators=2,
+        aggregator="verified:mean", **cfg_kw,
+    )
+    runner = eng.make_scan_runner(cfg, _grads_fn(), steps)
+    state0 = eng.init_state(cfg, seed=0)
+    byz_mask = jnp.zeros((N,)).at[jnp.asarray(list(byz), jnp.int32)].set(
+        1.0) if byz else jnp.zeros((N,))
+    state, _, outs = runner(state0, byz_mask, jnp.zeros(()))
+    return cfg, state, outs
+
+
+# ---------------------------------------------------------------------------
+# Sampler coverage: audit age below the CHOOSETARGET-style bound
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_cells,m,k", [(24, 2, 3), (16, 1, 1), (32, 2, 2)])
+def test_sampler_age_below_staleness_bound(n_cells, m, k):
+    bound = hier.staleness_bound(n_cells, m, k)
+    col_checked = jnp.full((n_cells,), -1, jnp.int32)
+    key = jax.random.key(42)
+    worst = 0
+    for t in range(6 * bound):
+        idx, mask = hier.sample_audit_cells(
+            jax.random.fold_in(key, t), t, col_checked, m, k, n_cells
+        )
+        ages = t - np.asarray(col_checked)[np.asarray(idx)]
+        if t >= bound:  # past warmup every draw must respect the bound
+            worst = max(worst, int(ages.max()))
+        col_checked = jnp.where(mask, t, col_checked)
+        if t == bound - 1:
+            # coverage: every column sampled at least once within one bound
+            assert (np.asarray(col_checked) >= 0).all()
+    assert worst <= bound, f"realized audit age {worst} > bound {bound}"
+    k_tot = hier.sampled_k(n_cells, m, k)
+    assert int(mask.sum()) == k_tot and idx.shape == (k_tot,)
+
+
+@pytest.mark.parametrize("groups", [None, 4])
+def test_engine_sampled_ledger_bounded(groups):
+    """The scanned engine's col_checked ledger obeys the same bound: the
+    per-column gap between consecutive broadcasts of outs.sampled_parts
+    never exceeds staleness_bound (+1 for the ledger's end-of-step
+    update lag)."""
+    m, k = 2, 2
+    bound = hier.staleness_bound(N, m, k)
+    steps = 4 * bound
+    cfg, state, outs = _run(steps, audit_k=k, groups=groups)
+    samp = np.asarray(outs.sampled_parts)  # (steps, n)
+    assert samp.shape == (steps, N)
+    assert (samp.sum(axis=1) == hier.sampled_k(N, m, k)).all()
+    for c in range(N):
+        hits = np.nonzero(samp[:, c])[0]
+        assert len(hits) > 0, f"column {c} never sampled in {steps} steps"
+        gaps = np.diff(np.concatenate([[-1], hits]))
+        assert gaps.max() <= bound + 1, (
+            f"column {c} waited {gaps.max()} steps (bound {bound})"
+        )
+    assert (np.asarray(state.col_checked) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Honest runs stay honest; sampling touches tables only
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "kw",
+    [dict(audit_k=2), dict(groups=4), dict(audit_k=2, groups=4)],
+    ids=["sampled", "hier", "hier_sampled"],
+)
+def test_honest_run_no_bans_no_accusations(kw):
+    _, state, outs = _run(12, **kw)
+    assert (np.asarray(state.ban_step) == -1).all()
+    assert not np.asarray(outs.accuse_mat).any()
+    assert not np.asarray(outs.sys_accuse).any()
+    assert np.asarray(outs.checksum_violations).sum() == 0
+
+
+def test_sampling_does_not_change_the_aggregate():
+    """audit_k shrinks the digest broadcast, not the aggregation: the
+    honest g_hat stream must match the full-table run exactly."""
+    _, _, full = _run(8)
+    _, _, sampled = _run(8, audit_k=1)
+    np.testing.assert_array_equal(
+        np.asarray(full.g_hat), np.asarray(sampled.g_hat)
+    )
+
+
+def test_hier_mean_matches_flat_mean():
+    """Two-level weighted mean == flat mean for the linear spec (equal
+    weights), so the hierarchical honest aggregate matches flat to float
+    tolerance."""
+    _, _, flat = _run(6)
+    _, _, h = _run(6, groups=4)
+    np.testing.assert_allclose(
+        np.asarray(flat.g_hat), np.asarray(h.g_hat), atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# The sampled window: an unsampled cheater is caught, within the bound
+# ---------------------------------------------------------------------------
+def test_unsampled_cheating_aggregator_banned_within_window():
+    """A lying aggregator (corrupts its partition, misreports its digest
+    row to cancel the checksum) under audit_k=1/m=1 sampling: the corrupted
+    column is invisible every step it goes unsampled, but the age-priority
+    draw reaches it within staleness_bound — the ban lands inside the
+    window, never silently lost. The validator peer-audit (full recompute)
+    runs concurrently, so the effective bound is the max of the two
+    coverage windows."""
+    m, k = 1, 1
+    liar = min(BYZ)
+    col_bound = hier.staleness_bound(N, m, k)
+    audit_bound = int(np.ceil(N / m)) + 2
+    bound = max(col_bound, audit_bound)
+    cfg = eng.EngineConfig(
+        n=N, d=D, tau=1.0, clip_iters=10, m_validators=m,
+        attack="none", aggregator_attack=True, aggregator_scale=5.0,
+        misreport_s=True, start_step=0, audit_k=k,
+    )
+    runner = eng.make_scan_runner(cfg, _grads_fn(), bound + 4)
+    state0 = eng.init_state(cfg, seed=0)
+    byz_mask = jnp.zeros((N,)).at[liar].set(1.0)
+    state, _, outs = runner(state0, byz_mask, jnp.zeros(()))
+    ban_step = np.asarray(state.ban_step)
+    assert ban_step[liar] >= 0, "lying aggregator never banned"
+    assert ban_step[liar] <= bound, (
+        f"banned at step {ban_step[liar]} > staleness window {bound}"
+    )
+    honest = [i for i in range(N) if i != liar]
+    assert (ban_step[honest] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# Mode x aggregator attack grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("agg", ["verified:mean", "butterfly_clip"])
+@pytest.mark.parametrize(
+    "kw",
+    [dict(), dict(audit_k=2), dict(groups=4), dict(audit_k=2, groups=4)],
+    ids=["full", "sampled", "hier", "hier_sampled"],
+)
+def test_mode_grid_bans_exactly_the_byzantine(kw, agg):
+    """sign_flip attackers across every mode combination: all Byzantine
+    banned within the validator-audit coverage window, zero honest bans,
+    no honest peer ever peer-accused, and full quiescence once the
+    attackers are gone. (While an attacker is still active, the iterative
+    flagship's V2 checksum — exact only at the clip fixed point — may
+    transiently flag an honest-OWNED partition; the recompute exonerates
+    it, which is the protocol working, so system accusations are only
+    required to vanish post-ban.)"""
+    m = 2
+    steps = int(np.ceil(N / m)) + 6
+    # clip_iters=60: the flagship's V2 identity holds at the converged
+    # fixed point; an under-converged residual would flag partitions
+    # spuriously (and be exonerated — noisy, but not the property here)
+    cfg = eng.EngineConfig(
+        n=N, d=D, tau=1.0, clip_iters=60, m_validators=m,
+        attack="sign_flip", lam=100.0, start_step=0, aggregator=agg, **kw,
+    )
+    runner = eng.make_scan_runner(cfg, _grads_fn(), steps)
+    state0 = eng.init_state(cfg, seed=0)
+    byz_mask = jnp.zeros((N,)).at[jnp.asarray(BYZ)].set(1.0)
+    state, _, outs = runner(state0, byz_mask, jnp.zeros(()))
+    ban_step = np.asarray(state.ban_step)
+    banned = set(np.nonzero(ban_step >= 0)[0].tolist())
+    assert banned == set(BYZ), f"banned {sorted(banned)} != {sorted(BYZ)}"
+    honest = np.asarray([i for i in range(N) if i not in BYZ])
+    accuse = np.asarray(outs.accuse_mat)  # (steps, accuser, target)
+    assert not accuse[:, :, honest].any(), "an honest peer was accused"
+    post = int(ban_step[list(BYZ)].max()) + 1
+    assert post < steps  # bans land inside the coverage window
+    assert not accuse[post:].any()
+    assert not np.asarray(outs.sys_accuse)[post:].any()
+    if agg == "verified:mean":
+        # the exact linear checksum never flags anyone but under attack
+        assert not np.asarray(outs.sys_accuse)[:, honest].any()
+
+
+# ---------------------------------------------------------------------------
+# The analytic table model behind the bench gates
+# ---------------------------------------------------------------------------
+def test_table_model_shrinks_and_clears_acceptance_ceiling():
+    full = hier.table_scalars(1024)
+    sampled = hier.table_scalars(1024, m_validators=2, audit_k=2)
+    h = hier.table_scalars(1024, groups=32)
+    both = hier.table_scalars(1024, m_validators=2, audit_k=2, groups=32)
+    assert both <= h <= full and both <= sampled <= full
+    # the PR acceptance gate (mirrored in benchmarks/check_regression.py)
+    assert both <= 0.10 * full
+    assert sampled <= 0.10 * full and h <= 0.10 * full
+    # sampling caps at the column count: a huge budget = full tables
+    assert hier.table_scalars(16, m_validators=8, audit_k=8) == \
+        hier.table_scalars(16)
+    with pytest.raises(ValueError):
+        hier.group_shape(16, 3)  # must divide n
+
+
+def test_sampled_k_and_bound_consistency():
+    assert hier.sampled_k(16, 2, 2) == 4
+    assert hier.sampled_k(16, 8, 8) == 16  # capped
+    assert hier.staleness_bound(16, 2, 2) == int(np.ceil(16 / 4)) + 2
