@@ -3,6 +3,16 @@
 Arrays are stored as (dtype, shape, raw bytes); the tree structure is
 path-keyed so restore does not need an example tree. Writes are atomic
 (tmp + rename) — a crashed save never corrupts the previous checkpoint.
+
+Dtype fidelity is exact for every leaf the protocol carries: bf16 wire
+buffers and int8 codec state round-trip through their own byte width (not a
+float64 detour), and the MPRNG uint32 key chain restores as uint32 — the
+scan-resume bitwise property needs the restored state to be the SAME BITS,
+not a value-preserving cast. Restores are writable copies (``frombuffer``
+views are read-only) and checked against ``FORMAT_VERSION``: a checkpoint
+from a different layout generation is rejected with a clear error instead
+of a downstream shape/index crash (NamedTuple paths are positional, so a
+field added to ``ProtocolState`` silently shifts every index).
 """
 from __future__ import annotations
 
@@ -12,6 +22,24 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
+
+# Bump whenever the on-disk layout changes meaning — e.g. a field added to a
+# NamedTuple in the saved tree (positional paths renumber), or a change to
+# how arrays are encoded. v1 = the unversioned seed format; v2 adds the
+# version field + elastic-membership state in ProtocolState.
+FORMAT_VERSION = 2
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a stored dtype string, including the ml_dtypes extension
+    types (bfloat16, float8_*) that plain ``np.dtype`` only knows when
+    ml_dtypes has registered them."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _flatten(tree):
@@ -37,6 +65,7 @@ def _path_str(p):
 
 def save_checkpoint(path: str, tree, step: int = 0, meta: dict | None = None):
     payload = {
+        "format_version": FORMAT_VERSION,
         "step": step,
         "meta": meta or {},
         "arrays": _flatten(tree),
@@ -51,11 +80,25 @@ def save_checkpoint(path: str, tree, step: int = 0, meta: dict | None = None):
 def load_checkpoint(path: str, example_tree=None):
     """Returns (tree, step, meta). With example_tree the stored arrays are
     mapped back into its structure (and dtypes cast to match); without it, a
-    flat {path: array} dict is returned."""
+    flat {path: array} dict is returned. Raises ValueError on a checkpoint
+    written by a different format generation."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
+    version = payload.get("format_version", 1)
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"checkpoint {path!r} has format_version={version}, this build "
+            f"reads format_version={FORMAT_VERSION} — the saved tree layout "
+            "is incompatible (positional NamedTuple paths do not survive "
+            "field changes); re-save from a matching build instead of "
+            "restoring it here"
+        )
     arrays = {
-        k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+        # copy(): frombuffer views are read-only and would poison any
+        # in-place consumer of the restored tree
+        k: np.frombuffer(v["data"], dtype=_np_dtype(v["dtype"]))
+        .reshape(v["shape"])
+        .copy()
         for k, v in payload["arrays"].items()
     }
     if example_tree is None:
@@ -68,5 +111,15 @@ def load_checkpoint(path: str, example_tree=None):
         if key not in arrays:
             raise KeyError(f"checkpoint missing array {key!r}")
         arr = arrays[key]
-        leaves.append(jnp.asarray(arr).astype(leaf.dtype).reshape(leaf.shape))
-    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"], payload["meta"]
+        leaf_dtype = getattr(leaf, "dtype", None)
+        if leaf_dtype is not None and arr.dtype != np.dtype(leaf_dtype):
+            # a cast here is a VALUE restore, not a bit restore — allowed
+            # (e.g. loading f32 params into a bf16 eval tree), but the
+            # stored dtype always wins when the example agrees
+            arr = arr.astype(leaf_dtype)
+        leaves.append(jnp.asarray(arr).reshape(np.shape(leaf)))
+    return (
+        jax.tree_util.tree_unflatten(treedef, leaves),
+        payload["step"],
+        payload["meta"],
+    )

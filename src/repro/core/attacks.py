@@ -123,6 +123,21 @@ def attack_index(kind: str) -> int:
     return ATTACK_INDEX[kind]
 
 
+def rejoin_under_new_key(slot, leave_step, rejoin_step, identity=None):
+    """The churn adversary: a (typically already banned) peer vacates its
+    slot and rejoins it, continuing whatever gradient attack its slot's
+    ``byz_mask`` entry encodes. ``identity=None`` is the NEW-KEY variant —
+    ``engine.encode_events`` mints a fresh identity, so the ban ledger does
+    not refuse it at admission and the probation spot-check (core.sybil)
+    must catch it; pass the original identity for the SAME-KEY variant,
+    refused directly from the identity ban ledger. Returns an event
+    schedule for ``EngineConfig``/``init_state`` (or ``--churn`` via the
+    equivalent ``leave@S:P,join@S:P`` string)."""
+    join = ((rejoin_step, "join", slot) if identity is None
+            else (rejoin_step, "join", slot, identity))
+    return [(leave_step, "leave", slot), join]
+
+
 def _uniform(fn, **fixed):
     def wrapped(grads, byz_mask, key, lam, delayed, hon_mask):
         return fn(

@@ -53,7 +53,14 @@ from repro.core import attacks as attacks_mod
 from repro.core import butterfly as bf
 from repro.core import compression as comp_mod
 from repro.core import hierarchy as hier_mod
+from repro.core import sybil as sybil_mod
 from repro.core import verification as verif_mod
+from repro.core.sybil import (  # noqa: F401 — re-exported lifecycle codes
+    SLOT_ACTIVE,
+    SLOT_BANNED,
+    SLOT_PROBATION,
+    SLOT_VACANT,
+)
 
 # Ban reason codes (StepOutputs.ban_reason_now / ProtocolState.ban_reason)
 BAN_NONE = 0
@@ -61,6 +68,7 @@ BAN_CHEATER = 1  # accused and the recompute proved it (ACCUSE, Alg. 4)
 BAN_COVERUP = 2  # misreported s for a banned peer's partition (Alg. 4 L11-13)
 BAN_FALSE_ACCUSER = 3  # slandered an honest peer (Hammurabi rule, Alg. 3)
 BAN_MPRNG = 4  # aborted / mismatched the MPRNG commit-reveal (App. A.2)
+BAN_SYBIL = 5  # failed a probation spot-check (Sybil gate, §3.3 / App. F)
 
 BAN_REASON_NAMES = {
     BAN_NONE: "",
@@ -68,7 +76,13 @@ BAN_REASON_NAMES = {
     BAN_COVERUP: "covered up a banned peer (s mismatch)",
     BAN_FALSE_ACCUSER: "false accusation",
     BAN_MPRNG: "mprng abort/mismatch",
+    BAN_SYBIL: "probation spot-check failed (sybil gate)",
 }
+
+# Membership event codes (ProtocolState.events rows: [step, kind, slot, id])
+EVENT_NONE = 0
+EVENT_JOIN = 1
+EVENT_LEAVE = 2
 
 
 class ProtocolState(NamedTuple):
@@ -77,11 +91,19 @@ class ProtocolState(NamedTuple):
     ``key`` is the run's base PRNG key; every draw is a fold of (key, step,
     phase), so a step's randomness is a pure function of the state — the
     property that makes scan and per-step execution bit-identical.
+
+    The peer axis is a static ``n``-slot CAPACITY, not a fixed peer set:
+    ``lifecycle`` tracks each slot through vacant → probation → active →
+    banned (``core.sybil``), ``events`` is the statically-shaped join/leave
+    schedule threaded through the scan (same idiom as the delay ring
+    buffer), and the ``id_*`` ledgers are keyed by IDENTITY — they outlive
+    the slot's occupant, so churn can never launder a ban or an accusation
+    history (``slot_identity`` maps slot → current occupant, -1 vacant).
     """
 
     step: jnp.ndarray  # () i32 — t
     key: jnp.ndarray  # PRNG key (base of the per-step chain)
-    active: jnp.ndarray  # (n,) f32 — 1 active, 0 banned
+    active: jnp.ndarray  # (n,) f32 — 1 active (== lifecycle SLOT_ACTIVE)
     validator: jnp.ndarray  # (n,) f32 — C_t (elected at end of step t-1)
     prev_agg: jnp.ndarray  # (n_parts, part) f32 — last aggregate (warm start)
     ban_step: jnp.ndarray  # (n,) i32 — step banned at, -1 if active
@@ -92,6 +114,14 @@ class ProtocolState(NamedTuple):
     # broadcast/audited (sampled-digest mode's staleness ledger; all
     # columns every step when sampling is off)
     delay_buf: jnp.ndarray  # (D, n, d) f32 — ring buffer for delayed attack
+    # --- elastic membership (core.sybil) ---
+    lifecycle: jnp.ndarray  # (n,) i32 — SLOT_* code per slot
+    slot_identity: jnp.ndarray  # (n,) i32 — identity occupying each slot
+    probation_clean: jnp.ndarray  # (n,) i32 — consecutive clean spot-checks
+    events: jnp.ndarray  # (n_events, 4) i32 — [step, kind, slot, identity]
+    id_ban_step: jnp.ndarray  # (n_ids,) i32 — identity ban ledger, -1 clean
+    id_ban_reason: jnp.ndarray  # (n_ids,) i32 — BAN_* per identity
+    id_accused: jnp.ndarray  # (n_ids,) i32 — per-identity accusation ledger
 
 
 class StepOutputs(NamedTuple):
@@ -113,6 +143,7 @@ class StepOutputs(NamedTuple):
     # early-exit's actual budget otherwise)
     sampled_parts: jnp.ndarray  # (n,) bool — digest columns broadcast this
     # step (all-True when sampled-digest mode is off)
+    lifecycle: jnp.ndarray  # (n,) i32 — post-step SLOT_* code per slot
 
 
 @dataclass(frozen=True)
@@ -164,16 +195,37 @@ class EngineConfig:
     # group, linear level-2 combine across groups with its own g x g
     # digest exchange (always-on zero-sum checksum). None/1 = flat.
     groups: int | None = None
+    # --- elastic membership (core.sybil) ---
+    # capacity of the device-resident join/leave event table threaded
+    # through the scan; 0 = fixed peer set (every existing config), the
+    # fast path that skips all membership machinery.
+    n_events: int = 0
+    # consecutive clean public-seed spot-checks a joining peer must pass
+    # before its slot flips probation -> active (App. F probation window)
+    probation_steps: int = 4
+    # identity-ledger capacity; 0 = n + n_events (every event can
+    # introduce at most one fresh identity)
+    max_identities: int = 0
 
     def __post_init__(self):
         if self.audit_k is not None and self.audit_k < 1:
             raise ValueError("audit_k must be >= 1 (None = full tables)")
         if self.groups is not None and self.groups > 1:
             hier_mod.group_shape(self.n, self.groups)  # validates n % g
+        if self.n_events < 0 or self.probation_steps < 1:
+            raise ValueError("n_events >= 0 and probation_steps >= 1")
 
     @property
     def hierarchical(self) -> bool:
         return self.groups is not None and self.groups > 1
+
+    @property
+    def elastic(self) -> bool:
+        return self.n_events > 0
+
+    @property
+    def n_ids(self) -> int:
+        return max(self.max_identities, self.n + self.n_events)
 
     def agg_spec(self) -> "agg_mod.AggregatorSpec":
         """The resolved aggregator spec (legacy knobs filled as defaults).
@@ -233,7 +285,55 @@ def config_from_attack(n, d, attack, **kw) -> EngineConfig:
     )
 
 
-def init_state(cfg: EngineConfig, seed: int = 0) -> ProtocolState:
+def encode_events(cfg: EngineConfig, schedule) -> jnp.ndarray:
+    """Encode a host-side churn schedule into the statically-shaped
+    ``(cfg.n_events, 4)`` i32 event table carried in :class:`ProtocolState`.
+
+    ``schedule``: iterable of ``(step, kind, slot)`` / ``(step, kind, slot,
+    identity)`` tuples (kind ``"join"``/``"leave"`` or EVENT_* code) or
+    :class:`repro.core.sybil.MembershipEvent`. A join WITHOUT an explicit
+    identity gets a fresh one (``n``, ``n+1``, ... in schedule order) — the
+    rejoin-under-new-key model; passing the identity of a previously banned
+    peer is the same-key rejoin, re-banned at admission from the identity
+    ledger. Events are sorted by (step, leaves-first) so a leave+join on
+    the same slot at the same step is a handoff; unused rows are padded
+    inert (step -1 never fires).
+    """
+    kind_codes = {"join": EVENT_JOIN, "leave": EVENT_LEAVE,
+                  EVENT_JOIN: EVENT_JOIN, EVENT_LEAVE: EVENT_LEAVE}
+    rows, next_id = [], cfg.n
+    for ev in schedule:
+        if isinstance(ev, sybil_mod.MembershipEvent):
+            ev = (ev.step, ev.kind, ev.slot)
+        step, kind, slot = ev[0], kind_codes[ev[1]], ev[2]
+        if not 0 <= slot < cfg.n:
+            raise ValueError(f"event slot {slot} outside [0, {cfg.n})")
+        if kind == EVENT_JOIN:
+            ident = ev[3] if len(ev) > 3 else next_id
+            next_id = max(next_id, ident + 1)
+            if not 0 <= ident < cfg.n_ids:
+                raise ValueError(
+                    f"identity {ident} outside [0, {cfg.n_ids}); raise "
+                    "EngineConfig.max_identities"
+                )
+        else:
+            ident = -1
+        rows.append((int(step), int(kind), int(slot), int(ident)))
+    if len(rows) > cfg.n_events:
+        raise ValueError(
+            f"{len(rows)} events > EngineConfig.n_events={cfg.n_events}"
+        )
+    rows.sort(key=lambda r: (r[0], 0 if r[1] == EVENT_LEAVE else 1))
+    rows += [(-1, EVENT_NONE, 0, -1)] * (cfg.n_events - len(rows))
+    return jnp.asarray(rows, jnp.int32).reshape(cfg.n_events, 4)
+
+
+def init_state(cfg: EngineConfig, seed: int = 0, events=None,
+               vacant=()) -> ProtocolState:
+    """Initial protocol state. ``events``: a churn schedule (anything
+    :func:`encode_events` accepts, or an already-encoded (n_events, 4)
+    array). ``vacant``: slots that start unoccupied (capacity reclaimed by
+    later join events)."""
     n = cfg.n
     buf_elems = cfg.delay_depth * n * cfg.d
     if buf_elems > 2**28:  # > ~0.5 GiB of bf16 carried through every step
@@ -244,14 +344,31 @@ def init_state(cfg: EngineConfig, seed: int = 0) -> ProtocolState:
             "(typical runs use 5-50 — the legacy host buffer grew lazily, "
             "the engine's is dense)"
         )
+    lifecycle = jnp.full((n,), SLOT_ACTIVE, jnp.int32)
+    slot_identity = jnp.arange(n, dtype=jnp.int32)
+    for s in vacant:
+        lifecycle = lifecycle.at[int(s)].set(SLOT_VACANT)
+        slot_identity = slot_identity.at[int(s)].set(-1)
+    active0 = (lifecycle == SLOT_ACTIVE).astype(jnp.float32)
+    if events is None:
+        ev = jnp.full((cfg.n_events, 4), -1, jnp.int32)
+    elif isinstance(events, (jnp.ndarray,)) or (
+        hasattr(events, "shape") and getattr(events, "ndim", 0) == 2
+    ):
+        ev = jnp.asarray(events, jnp.int32)
+        if ev.shape != (cfg.n_events, 4):
+            raise ValueError(
+                f"events shape {ev.shape} != ({cfg.n_events}, 4)"
+            )
+    else:
+        ev = encode_events(cfg, events)
     key = jax.random.PRNGKey(seed)
     # elect step-0 validators from the same chain the steps use (fold at -1)
-    validator = _elect(cfg, jax.random.fold_in(key, 2**31 - 1),
-                       jnp.ones((n,), jnp.float32))
+    validator = _elect(cfg, jax.random.fold_in(key, 2**31 - 1), active0)
     return ProtocolState(
         step=jnp.asarray(0, jnp.int32),
         key=key,
-        active=jnp.ones((n,), jnp.float32),
+        active=active0,
         validator=validator,
         prev_agg=jnp.zeros((cfg.n_parts, cfg.part), jnp.float32),
         ban_step=jnp.full((n,), -1, jnp.int32),
@@ -265,6 +382,13 @@ def init_state(cfg: EngineConfig, seed: int = 0) -> ProtocolState:
             (cfg.delay_depth, n, cfg.d),
             jnp.bfloat16 if cfg.delay_depth > 1 else jnp.float32,
         ),
+        lifecycle=lifecycle,
+        slot_identity=slot_identity,
+        probation_clean=jnp.zeros((n,), jnp.int32),
+        events=ev,
+        id_ban_step=jnp.full((cfg.n_ids,), -1, jnp.int32),
+        id_ban_reason=jnp.zeros((cfg.n_ids,), jnp.int32),
+        id_accused=jnp.zeros((cfg.n_ids,), jnp.int32),
     )
 
 
@@ -283,18 +407,96 @@ def _phase_key(state: ProtocolState, phase: int):
 
 def flip_mask(cfg: EngineConfig, state: ProtocolState, byz_mask):
     """Peers whose gradients are computed with flipped labels this step
-    (LABEL FLIP happens at gradient time — feed this to ``grads_fn``)."""
+    (LABEL FLIP happens at gradient time — feed this to ``grads_fn``).
+    Probation rows flip too: their public-seed work is what the Sybil gate
+    spot-checks, so the attack must be allowed to land there."""
     if cfg.attack != "label_flip":
         return jnp.zeros((cfg.n,), bool)
-    return _attacking(cfg, state.step) & (byz_mask > 0) & (state.active > 0)
+    engaged = (state.active > 0) | (state.lifecycle == SLOT_PROBATION)
+    return _attacking(cfg, state.step) & (byz_mask > 0) & engaged
 
 
-def phase_attack(cfg: EngineConfig, state: ProtocolState, G, honest_G, byz):
+def phase_membership(cfg: EngineConfig, state: ProtocolState) -> ProtocolState:
+    """Fire this step's join/leave events (the device-resident schedule in
+    ``state.events``) before the round runs.
+
+    Leave: the slot goes vacant; the SLOT ledgers (ban_step/ban_reason/
+    accused_count/probation_clean) describe the occupant, so they reset with
+    it — the occupant's history lives on in the identity ledgers (id_*),
+    which membership never touches. Join: only onto a vacant slot; the
+    incoming identity's history is restored from the identity ledgers — a
+    previously banned identity (same-key rejoin) lands directly in BANNED,
+    anyone else starts PROBATION at zero clean checks. ``col_checked`` /
+    ``last_checked`` are column/audit staleness, a property of the
+    topology, not the occupant — churn leaves them alone.
+
+    Events are applied in row order (encode_events sorts step-then-
+    leaves-first); a row whose step != t, or whose precondition fails
+    (leave of a vacant slot, join onto an occupied one), is a no-op via
+    out-of-range scatter drop.
+    """
+    if not cfg.elastic:
+        return state
+    n = cfg.n
+    lifecycle, slot_identity = state.lifecycle, state.slot_identity
+    clean, accused = state.probation_clean, state.accused_count
+    ban_step, ban_reason = state.ban_step, state.ban_reason
+    for e in range(cfg.n_events):  # static unroll — n_events is small
+        ev = state.events[e]
+        fire = ev[0] == state.step
+        kind, slot, ident = ev[1], ev[2], ev[3]
+        slot_c = jnp.clip(slot, 0, n - 1)
+        ident_c = jnp.clip(ident, 0, cfg.n_ids - 1)
+
+        do_leave = fire & (kind == EVENT_LEAVE) & (
+            lifecycle[slot_c] != SLOT_VACANT
+        )
+        ls = jnp.where(do_leave, slot_c, n)  # n = out of range -> drop
+        lifecycle = lifecycle.at[ls].set(SLOT_VACANT, mode="drop")
+        slot_identity = slot_identity.at[ls].set(-1, mode="drop")
+        clean = clean.at[ls].set(0, mode="drop")
+        accused = accused.at[ls].set(0, mode="drop")
+        ban_step = ban_step.at[ls].set(-1, mode="drop")
+        ban_reason = ban_reason.at[ls].set(BAN_NONE, mode="drop")
+
+        do_join = fire & (kind == EVENT_JOIN) & (
+            lifecycle[slot_c] == SLOT_VACANT
+        )
+        pre_banned = state.id_ban_step[ident_c] >= 0
+        js = jnp.where(do_join, slot_c, n)
+        lifecycle = lifecycle.at[js].set(
+            jnp.where(pre_banned, SLOT_BANNED, SLOT_PROBATION), mode="drop"
+        )
+        slot_identity = slot_identity.at[js].set(ident_c, mode="drop")
+        clean = clean.at[js].set(0, mode="drop")
+        accused = accused.at[js].set(state.id_accused[ident_c], mode="drop")
+        ban_step = ban_step.at[js].set(
+            jnp.where(pre_banned, state.id_ban_step[ident_c], -1),
+            mode="drop",
+        )
+        ban_reason = ban_reason.at[js].set(
+            jnp.where(pre_banned, state.id_ban_reason[ident_c], BAN_NONE),
+            mode="drop",
+        )
+    active = (lifecycle == SLOT_ACTIVE).astype(jnp.float32)
+    return state._replace(
+        lifecycle=lifecycle, slot_identity=slot_identity,
+        probation_clean=clean, accused_count=accused,
+        ban_step=ban_step, ban_reason=ban_reason,
+        active=active, validator=state.validator * active,
+    )
+
+
+def phase_attack(cfg: EngineConfig, state: ProtocolState, G, honest_G, byz,
+                 engage_b=None):
     """apply_attack: Byzantine rows swap in their attack vectors; the delay
-    ring buffer rotates; honest peers optionally self-clip (Alg. 9)."""
+    ring buffer rotates; honest peers optionally self-clip (Alg. 9).
+    ``engage_b`` widens the attacked-row mask beyond the active set (the
+    elastic path includes probation rows, so the Sybil spot-check sees the
+    attack); defaults to the active mask."""
     t = state.step
     att = _attacking(cfg, t)
-    active_b = state.active > 0
+    active_b = state.active > 0 if engage_b is None else engage_b
     delay_buf = state.delay_buf
 
     if cfg.has_gradient_attack:
@@ -777,7 +979,12 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
     """
     spec = cfg.agg_spec()
     byz = jnp.asarray(byz_mask) > 0
+
+    # ---- membership: fire this step's join/leave events ------------------
+    state = phase_membership(cfg, state)
     active = state.active
+    active_b = active > 0
+    prob_b = state.lifecycle == SLOT_PROBATION
     validator = state.validator * active
     if spec.verifiable:
         weights = active * (1.0 - validator)  # Alg. 1 L19: validators sit out
@@ -786,12 +993,32 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         # aside, every active peer contributes to the aggregate
         weights = active
 
-    keep = active[:, None] > 0
+    # probation rows keep their payloads through the attack phase (the
+    # Sybil gate must see what they actually broadcast) but NEVER reach the
+    # aggregate or the accusation fabric — they are re-zeroed below.
+    keep = (active_b | prob_b)[:, None]
     G = jnp.where(keep, jnp.asarray(G, jnp.float32), 0.0)
     honest_G = jnp.where(keep, jnp.asarray(honest_G, jnp.float32), 0.0)
 
     # ---- apply_attack ----------------------------------------------------
-    G, honest_G, delay_buf = phase_attack(cfg, state, G, honest_G, byz)
+    G, honest_G, delay_buf = phase_attack(
+        cfg, state, G, honest_G, byz, engage_b=active_b | prob_b
+    )
+
+    # ---- Sybil probation gate (core.sybil, §3.3 / App. F) ----------------
+    # every probation row is spot-checked EVERY step against the public-
+    # seed recompute; one mismatch bans the identity, a full clean window
+    # promotes the slot. Structurally upstream of aggregation: a probation
+    # payload influences nothing but this check.
+    if cfg.elastic:
+        prob_mismatch = sybil_mod.probation_check(G, honest_G, prob_b)
+    else:
+        prob_mismatch = jnp.zeros((cfg.n,), bool)
+    probation_clean, promote, sybil_ban = sybil_mod.probation_step(
+        prob_b, prob_mismatch, state.probation_clean, cfg.probation_steps
+    )
+    G = jnp.where(active_b[:, None], G, 0.0)
+    honest_G = jnp.where(active_b[:, None], honest_G, 0.0)
 
     # ---- MPRNG (shared seed + abort bans) --------------------------------
     seed, mprng_ban = phase_mprng(cfg, state, byz)
@@ -887,6 +1114,29 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         accused_inc = jnp.zeros((n,), jnp.int32)
         new_active = active
 
+    # ---- lifecycle transitions (bans + probation promotions) -------------
+    # protocol bans (active rows) and sybil bans (probation rows) are
+    # disjoint by construction; promote is clean-probation only. In the
+    # fixed-membership case promote/sybil_ban are identically False and
+    # (new_lifecycle == ACTIVE) reproduces active * (1 - banned_now) bitwise.
+    banned_now = banned_now | sybil_ban
+    reason = jnp.where(sybil_ban, BAN_SYBIL, reason).astype(jnp.int32)
+    new_lifecycle = jnp.where(
+        banned_now, SLOT_BANNED,
+        jnp.where(promote, SLOT_ACTIVE, state.lifecycle),
+    ).astype(jnp.int32)
+    new_active = (new_lifecycle == SLOT_ACTIVE).astype(jnp.float32)
+
+    # ---- identity ledgers (persist across leave/rejoin) ------------------
+    ident = state.slot_identity
+    idc = jnp.clip(ident, 0, cfg.n_ids - 1)
+    first_ban = banned_now & (ident >= 0) & (state.id_ban_step[idc] < 0)
+    sid = jnp.where(first_ban, idc, cfg.n_ids)  # out of range -> drop
+    id_ban_step = state.id_ban_step.at[sid].set(state.step, mode="drop")
+    id_ban_reason = state.id_ban_reason.at[sid].set(reason, mode="drop")
+    aid = jnp.where(ident >= 0, idc, cfg.n_ids)
+    id_accused = state.id_accused.at[aid].add(accused_inc, mode="drop")
+
     # ---- elect next validators ------------------------------------------
     next_validator = _elect(cfg, _phase_key(state, 4), new_active)
 
@@ -912,6 +1162,13 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         last_checked=last_checked,
         col_checked=col_checked,
         delay_buf=delay_buf,
+        lifecycle=new_lifecycle,
+        slot_identity=state.slot_identity,
+        probation_clean=probation_clean,
+        events=state.events,
+        id_ban_step=id_ban_step,
+        id_ban_reason=id_ban_reason,
+        id_accused=id_accused,
     )
     out = StepOutputs(
         g_hat=g_hat,
@@ -928,6 +1185,7 @@ def protocol_step(cfg: EngineConfig, state: ProtocolState, byz_mask, G,
         clip_iters_used=iters_used,
         sampled_parts=(samp_mask if sampling
                        else jnp.ones((cfg.n,), bool)),
+        lifecycle=new_lifecycle,
     )
     return new_state, out
 

@@ -1,21 +1,297 @@
-"""Sybil-resistance heuristic (paper §3.3 / App. F).
+"""Sybil-gated admission + slot lifecycle (paper §3.3 / App. F).
 
-A new peer joining mid-run must prove continuous honest work before it is
-counted: for ``probation_steps`` consecutive steps it computes gradients from
-its assigned public seeds and broadcasts commitments; existing peers spot-
-check them (same validator machinery). Only after a clean probation does the
-peer enter the active set — so a Sybil attacker's influence stays
-proportional to its actual compute, not to how many identities it forges.
+The volunteer-compute setting (Diskin et al., PAPERS.md) has peers joining
+and leaving mid-run, so the engine's peer axis is a static ``max_peers``
+capacity of SLOTS, each in one of four lifecycle states:
+
+    vacant ──join──▶ probation ──clean window──▶ active
+       ▲                 │                          │
+       └──────leave──────┼───────leave──────────────┤
+                         ▼                          ▼
+                      banned ◀──accuse/checksum/audit
+
+A joining peer does not vote: for ``probation_steps`` consecutive rounds it
+computes gradients from its assigned PUBLIC seeds and broadcasts the
+commitment; validators recompute from the same seeds and compare — exactly
+the CheckComputations digest machinery, applied to a row that never enters
+the aggregate. One mismatch bans the identity (``BAN_SYBIL``); only a fully
+clean window flips the slot to active. A Sybil attacker's influence is
+therefore bounded by the honest public-seed work it actually performs —
+forging identities buys probation seats, not aggregate weight.
+
+Ban and accusation ledgers are keyed by IDENTITY, not slot: a slot freed by
+a leave can be reclaimed by a new joiner without laundering the previous
+occupant's history (Karimireddy et al.'s history argument, PAPERS.md). A
+banned identity rejoining under the SAME key is re-banned at admission from
+the identity ledger; rejoining under a NEW key starts a fresh identity that
+must survive probation — where its Byzantine behaviour is caught before it
+ever re-enters the aggregate.
+
+Three call surfaces share the rule:
+
+* the jit-safe functions below (``probation_check`` / ``probation_step``)
+  — pure, statically shaped, called from ``core.engine.protocol_step`` so
+  churn composes with ``lax.scan``;
+* :class:`HostMembership` — the launch path's host-side mirror: the same
+  lifecycle state machine driven between scan dispatches by the in-program
+  probe/audit observations (``launch.train --churn``);
+* :class:`SybilGate` — the legacy host simulation of App. F (kept for the
+  probation-economics test), now expressed over the same digest check.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.protocol import grad_hash
+# Slot lifecycle codes (ProtocolState.lifecycle / HostMembership.lifecycle)
+SLOT_VACANT = 0
+SLOT_PROBATION = 1
+SLOT_ACTIVE = 2
+SLOT_BANNED = 3
+
+LIFECYCLE_NAMES = {
+    SLOT_VACANT: "vacant",
+    SLOT_PROBATION: "probation",
+    SLOT_ACTIVE: "active",
+    SLOT_BANNED: "banned",
+}
 
 
+# ---------------------------------------------------------------------------
+# Jit-safe probation gate (engine-side)
+# ---------------------------------------------------------------------------
+def probation_check(G, honest_G, probation_b):
+    """Validator spot-check of the probation rows' public-seed work.
+
+    ``G`` is what each probation peer broadcast for this step; ``honest_G``
+    is what any validator recomputing from the same public seed obtains.
+    Commitment equality ≡ array equality (the engine's standing
+    equivalence): a row that differs in ANY coordinate fails the check.
+    Probation rows never enter the aggregate, so this comparison is over
+    the raw committed payload, not the wire projection.
+
+    Returns (n,) bool — probation rows caught misbehaving this step.
+    """
+    return jnp.any(G != honest_G, axis=1) & probation_b
+
+
+def probation_step(probation_b, mismatch, clean, probation_steps: int):
+    """Advance the probation window one step (pure, statically shaped).
+
+    clean counter: reset on a mismatch, +1 on a clean spot-check, and
+    pinned to 0 outside probation (a fresh joiner always starts at 0).
+    Returns (new_clean, promote, sybil_ban):
+
+    * ``sybil_ban``  — probation rows banned NOW (any mismatch; one strike);
+    * ``promote``    — probation rows whose window completed this step
+      (``probation_steps`` consecutive clean checks): active from the next
+      round's aggregate on;
+    * ``new_clean``  — the updated counter.
+    """
+    new_clean = jnp.where(
+        probation_b & ~mismatch, clean + 1, jnp.zeros_like(clean)
+    )
+    promote = probation_b & ~mismatch & (new_clean >= probation_steps)
+    sybil_ban = mismatch & probation_b
+    return new_clean, promote, sybil_ban
+
+
+# ---------------------------------------------------------------------------
+# Host-side membership ledger (launch path)
+# ---------------------------------------------------------------------------
+@dataclass
+class MembershipEvent:
+    step: int
+    kind: str  # "join" | "leave"
+    slot: int
+
+
+class HostMembership:
+    """The slot lifecycle state machine on the host, for the launch path.
+
+    ``launch.train`` keeps one of these next to its weights vector: events
+    from the ``--churn`` schedule toggle slots between scan dispatches, the
+    in-program probe observations (``verif["probe_mismatch"]`` — each
+    peer's max deviation from its public-seed recompute) drive the
+    probation window, and ban observations (checksum / audit offenders)
+    feed the identity ledger. Identities are allocated monotonically: a
+    slot reclaimed after a leave gets a FRESH identity (the new-key rejoin
+    adversary), so the banned set never shrinks — bans survive churn by
+    construction.
+
+    The whole state round-trips through :meth:`to_tree` /
+    :meth:`from_tree` for checkpointed recovery (``--checkpoint-dir`` /
+    ``--resume``).
+    """
+
+    def __init__(self, n_slots: int, probation_steps: int = 3,
+                 events: list[MembershipEvent] | None = None,
+                 start_vacant: tuple[int, ...] = ()):
+        self.n = int(n_slots)
+        self.probation_steps = int(probation_steps)
+        self.events = sorted(events or [], key=lambda e: e.step)
+        self.lifecycle = np.full((self.n,), SLOT_ACTIVE, np.int32)
+        self.slot_identity = np.arange(self.n, dtype=np.int32)
+        self.clean = np.zeros((self.n,), np.int32)
+        for s in start_vacant:
+            self.lifecycle[s] = SLOT_VACANT
+            self.slot_identity[s] = -1
+        self.next_identity = int(self.n)
+        self.banned_identities: dict[int, int] = {}  # identity -> ban step
+        self.log: list[str] = []
+
+    # -- views ------------------------------------------------------------
+    def weights(self) -> np.ndarray:
+        return (self.lifecycle == SLOT_ACTIVE).astype(np.float32)
+
+    def probation_mask(self) -> np.ndarray:
+        return self.lifecycle == SLOT_PROBATION
+
+    def banned_slots(self) -> list[int]:
+        return sorted(np.nonzero(self.lifecycle == SLOT_BANNED)[0].tolist())
+
+    # -- transitions ------------------------------------------------------
+    def apply_events(self, step: int):
+        """Fire every scheduled join/leave with event.step == step."""
+        for ev in self.events:
+            if ev.step != step:
+                continue
+            if ev.kind == "leave":
+                if self.lifecycle[ev.slot] == SLOT_VACANT:
+                    continue
+                self.log.append(
+                    f"step {step}: slot {ev.slot} "
+                    f"(identity {self.slot_identity[ev.slot]}) left"
+                )
+                self.lifecycle[ev.slot] = SLOT_VACANT
+                self.slot_identity[ev.slot] = -1
+                self.clean[ev.slot] = 0
+            elif ev.kind == "join":
+                if self.lifecycle[ev.slot] != SLOT_VACANT:
+                    continue  # join onto an occupied slot is a no-op
+                ident = self.next_identity
+                self.next_identity += 1
+                self.slot_identity[ev.slot] = ident
+                self.clean[ev.slot] = 0
+                # a fresh identity can never be pre-banned; same-key rejoin
+                # (identity reuse) would short-circuit here
+                if ident in self.banned_identities:
+                    self.lifecycle[ev.slot] = SLOT_BANNED
+                else:
+                    self.lifecycle[ev.slot] = SLOT_PROBATION
+                self.log.append(
+                    f"step {step}: identity {ident} joined at slot "
+                    f"{ev.slot} (probation)"
+                )
+            else:
+                raise ValueError(f"unknown membership event kind {ev.kind!r}")
+
+    def ban_slots(self, slots, step: int):
+        """Ban the current OCCUPANTS of ``slots`` (identity-keyed)."""
+        newly = []
+        for s in sorted(set(int(x) for x in slots)):
+            ident = int(self.slot_identity[s])
+            if ident < 0 or self.lifecycle[s] == SLOT_BANNED:
+                continue
+            self.lifecycle[s] = SLOT_BANNED
+            self.banned_identities.setdefault(ident, int(step))
+            newly.append((s, ident))
+        if newly:
+            self.log.append(
+                f"step {step}: banned " +
+                ", ".join(f"slot {s} (identity {i})" for s, i in newly)
+            )
+        return [s for s, _ in newly]
+
+    def observe_probe(self, probe_row, step: int, tol: float = 1e-6):
+        """One step's probation spot-check results: ``probe_row`` is the
+        per-slot max deviation between the broadcast payload and the
+        public-seed recompute (exact zero for honest peers). Any excess
+        over float tolerance during probation bans the identity; a clean
+        window of ``probation_steps`` checks promotes the slot."""
+        probe_row = np.asarray(probe_row, np.float64)
+        for s in range(self.n):
+            if self.lifecycle[s] != SLOT_PROBATION:
+                continue
+            if probe_row[s] > tol:
+                ident = int(self.slot_identity[s])
+                self.lifecycle[s] = SLOT_BANNED
+                self.banned_identities.setdefault(ident, int(step))
+                self.log.append(
+                    f"step {step}: probation spot-check failed — banned "
+                    f"slot {s} (identity {ident})"
+                )
+            else:
+                self.clean[s] += 1
+                if self.clean[s] >= self.probation_steps:
+                    self.lifecycle[s] = SLOT_ACTIVE
+                    self.log.append(
+                        f"step {step}: identity "
+                        f"{int(self.slot_identity[s])} admitted at slot {s}"
+                    )
+
+    # -- checkpoint round-trip -------------------------------------------
+    def to_tree(self) -> dict:
+        ids = sorted(self.banned_identities)
+        return {
+            "lifecycle": self.lifecycle.copy(),
+            "slot_identity": self.slot_identity.copy(),
+            "clean": self.clean.copy(),
+            "next_identity": np.asarray(self.next_identity, np.int32),
+            "banned_ids": np.asarray(ids, np.int32),
+            "banned_steps": np.asarray(
+                [self.banned_identities[i] for i in ids], np.int32
+            ),
+        }
+
+    def restore_tree(self, tree: dict):
+        self.lifecycle = np.asarray(tree["lifecycle"], np.int32).copy()
+        self.slot_identity = np.asarray(
+            tree["slot_identity"], np.int32
+        ).copy()
+        self.clean = np.asarray(tree["clean"], np.int32).copy()
+        self.next_identity = int(tree["next_identity"])
+        self.banned_identities = {
+            int(i): int(s)
+            for i, s in zip(tree["banned_ids"], tree["banned_steps"])
+        }
+        return self
+
+    def summary(self) -> dict:
+        return {
+            "lifecycle": self.lifecycle.tolist(),
+            "slot_identity": self.slot_identity.tolist(),
+            "weights": self.weights().tolist(),
+            "banned_slots": self.banned_slots(),
+            "banned_identities": sorted(self.banned_identities),
+            "next_identity": self.next_identity,
+        }
+
+
+def parse_churn(spec: str) -> list[MembershipEvent]:
+    """Parse ``--churn "leave@6:1,join@8:1"`` into membership events:
+    ``KIND@STEP:SLOT`` comma-separated, kind in {join, leave}. A join always
+    allocates a FRESH identity for the slot (the new-key rejoin model)."""
+    events = []
+    for item in filter(None, (s.strip() for s in spec.split(","))):
+        try:
+            kind, rest = item.split("@", 1)
+            step, slot = rest.split(":", 1)
+        except ValueError:
+            raise ValueError(
+                f"bad churn event {item!r}: expected KIND@STEP:SLOT"
+            ) from None
+        if kind not in ("join", "leave"):
+            raise ValueError(f"bad churn kind {kind!r} (join|leave)")
+        events.append(MembershipEvent(int(step), kind, int(slot)))
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Legacy App. F probation-economics simulation (host-side)
+# ---------------------------------------------------------------------------
 @dataclass
 class JoinRequest:
     peer_id: int
@@ -25,9 +301,13 @@ class JoinRequest:
 
 
 class SybilGate:
-    """Tracks probation for joining peers; spot-checks their commitments."""
+    """The original host simulation of App. F probation: pending identities
+    submit gradient commitments, spot-checked with ``check_prob``; kept as
+    the probabilistic-economics model (expected probation cost ~ honest
+    work) next to the engine's deterministic every-step gate above."""
 
-    def __init__(self, grad_fn, probation_steps: int = 20, check_prob: float = 0.5, seed: int = 0):
+    def __init__(self, grad_fn, probation_steps: int = 20,
+                 check_prob: float = 0.5, seed: int = 0):
         self.grad_fn = grad_fn
         self.probation = probation_steps
         self.check_prob = check_prob
@@ -40,20 +320,32 @@ class SybilGate:
         self.pending[peer_id] = JoinRequest(peer_id, step, dishonest=dishonest)
 
     def step(self, params, t):
-        """One probation round: each pending peer submits a gradient hash;
-        admitted once `probation` clean (spot-checked) rounds accumulate."""
+        """One probation round: each pending peer submits a gradient
+        commitment; admitted once ``probation`` clean (spot-checked) rounds
+        accumulate."""
         done = []
         for pid, req in self.pending.items():
-            honest = np.asarray(self.grad_fn(pid, t, params, False), np.float32)
+            honest = np.asarray(
+                self.grad_fn(pid, t, params, False), np.float32
+            )
             if req.dishonest:
                 # a Sybil identity with no compute behind it sends garbage
-                submitted = self.rng.normal(size=honest.shape).astype(np.float32)
+                submitted = self.rng.normal(size=honest.shape).astype(
+                    np.float32
+                )
             else:
                 submitted = honest
-            commitment = grad_hash(submitted)
             if self.rng.random() < self.check_prob:
-                if commitment != grad_hash(honest):
-                    req.dishonest_caught = True
+                caught = bool(
+                    np.asarray(
+                        probation_check(
+                            jnp.asarray(submitted)[None],
+                            jnp.asarray(honest)[None],
+                            jnp.ones((1,), bool),
+                        )
+                    )[0]
+                )
+                if caught:
                     self.rejected.append(pid)
                     done.append(pid)
                     continue

@@ -728,6 +728,17 @@ def _build_btard_step(
         vec = _flatten_local([l[0] for l in leaves], transport_dtype)
         vec_honest = vec
         vec = device_attack(vec, byz_mask, peer_axes, attack, key)
+        # per-peer public-seed spot-check residue: every peer's max
+        # deviation between the payload it broadcast and the recompute from
+        # the public batch (vec_honest IS that recompute here) — exact zero
+        # for honest peers. The host membership layer consumes this for
+        # PROBATION slots only (the Sybil gate of core.sybil: a joining
+        # peer is spot-checked every step of its probation window), the
+        # protocol-faithful subset of a per-peer observable.
+        probe = jnp.max(jnp.abs(vec.astype(jnp.float32)
+                                - vec_honest.astype(jnp.float32)))
+        if model_axes:
+            probe = jax.lax.pmax(probe, model_axes)
         audit_grad = None
         if spec.verifiable:
             # gradient-recompute audit (CHOOSETARGET's payload arm): the
@@ -758,6 +769,7 @@ def _build_btard_step(
         )
         agg_leaves = _unflatten_local(agg_vec, [l[0] for l in leaves])
         agg = jax.tree.unflatten(jax.tree.structure(grads), agg_leaves)
+        verif["probe_mismatch"] = probe[None]
         return agg, verif
 
     manual_pspecs = jax.tree.map(
@@ -782,6 +794,7 @@ def _build_btard_step(
                 "audit_target": P(peer_axes),
                 "audit_grad_mismatch": P(peer_axes),
                 "audit_agg_mismatch": P(peer_axes),
+                "probe_mismatch": P(peer_axes),
             },
         ),
         axis_names=set(mesh.axis_names),

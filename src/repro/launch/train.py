@@ -157,6 +157,37 @@ def main():
                     help="feed host-precomputed batches to the scan step "
                          "instead of generating them in-scan on device "
                          "(the default scan path is fully device-resident)")
+    ap.add_argument("--churn", default="", metavar="EVENTS",
+                    help="elastic-membership schedule: comma-separated "
+                         "KIND@STEP:SLOT events (kind join|leave), e.g. "
+                         "'leave@6:1,join@8:1'. A leave vacates the slot; a "
+                         "join puts a FRESH identity into a vacant slot "
+                         "under probation — it computes public-seed "
+                         "gradients spot-checked every step (the "
+                         "probe_mismatch audit arm) and only a clean "
+                         "--probation-steps window admits it to the "
+                         "aggregate. Identity ban ledgers survive churn: a "
+                         "banned slot that leaves and rejoins is re-vetted, "
+                         "and re-banned the moment it misbehaves, without "
+                         "ever re-entering the aggregate")
+    ap.add_argument("--probation-steps", type=int, default=3,
+                    help="consecutive clean spot-checks a joining peer "
+                         "needs before its slot turns active (default 3)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="directory for crash-recovery checkpoints: "
+                         "params + optimizer + warm-start carry + the full "
+                         "membership/ban ledger are saved at every scan-"
+                         "chunk boundary (atomic), so a killed run resumes "
+                         "bitwise with --resume. Requires --scan-steps")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the checkpoint in --checkpoint-dir "
+                         "(same CLI config required); continues at the "
+                         "saved chunk boundary with identical bans and "
+                         "aggregates (scan-resume bitwise property)")
+    ap.add_argument("--halt-at", type=int, default=None, metavar="STEP",
+                    help="crash drill: exit right after the first chunk-"
+                         "boundary checkpoint at or beyond STEP (pair with "
+                         "--resume to verify recovery)")
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
@@ -168,13 +199,16 @@ def main():
 
     byz = set(int(x) for x in args.byzantine.split(",") if x)
 
+    import json
+
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint import load_checkpoint, save_checkpoint
     from repro.configs.base import InputShape
     from repro.core import butterfly as bf
+    from repro.core.sybil import HostMembership, parse_churn
     from repro.data import TokenPipeline
     from repro.launch.steps import (
         make_baseline_train_step,
@@ -242,18 +276,24 @@ def main():
         [1.0 if i in byz else 0.0 for i in range(n_peers)], jnp.float32
     )
     # every peer starts active — even the Byzantine ones; bans flow from the
-    # verification checksums below, never from out-of-band knowledge
-    weights = jnp.ones((n_peers,), jnp.float32)
-    banned_ids = set()
+    # verification checksums below, never from out-of-band knowledge. The
+    # membership ledger (core.sybil.HostMembership) owns the slot lifecycle:
+    # --churn events toggle slots between dispatches, the probe_mismatch
+    # audit arm drives probation spot-checks, and bans are keyed by IDENTITY
+    # so a leave/rejoin can never launder them.
+    mem = HostMembership(
+        n_peers, probation_steps=args.probation_steps,
+        events=parse_churn(args.churn) if args.churn else None,
+    )
+    weights = jnp.asarray(mem.weights())
 
-    def apply_bans(weights, *offender_sets):
-        new = {int(b) for s in offender_sets for b in s} - banned_ids
-        for b in new:
-            weights = weights.at[b].set(0.0)
-        if new:
-            banned_ids.update(new)
-            print(f"banned peers -> {sorted(banned_ids)}", flush=True)
-        return weights
+    def apply_bans(weights, step, *offender_sets):
+        newly = mem.ban_slots(
+            {int(b) for s in offender_sets for b in s}, step
+        )
+        if newly:
+            print(f"banned peers -> {mem.banned_slots()}", flush=True)
+        return jnp.asarray(mem.weights())
 
     def audit_offenders(verif, tol=1e-5):
         """Peers whose validator audit (gradient recompute or partition-
@@ -271,14 +311,56 @@ def main():
                 bad |= {int(i) for i in np.nonzero(a > tol)[0]}
         return bad
 
+    if args.churn and not n_scan:
+        # per-step mode applies events/probes too, but the CI-proven path
+        # (and the checkpointed one) is the scan loop — keep configs honest
+        print("note: --churn granularity is per step in non-scan mode")
+    if (args.checkpoint_dir or args.resume) and not n_scan:
+        ap.error("--checkpoint-dir/--resume require --scan-steps "
+                 "(checkpoints are cut at scan-chunk boundaries)")
+    if args.halt_at is not None and not args.checkpoint_dir:
+        ap.error("--halt-at exits after a boundary checkpoint, so it "
+                 "requires --checkpoint-dir")
+
     print(f"arch={model.cfg.name} params={model.param_count():,} "
           f"mesh={dict(mesh.shape)} peers={n_peers} byz={sorted(byz)} "
           f"aggregator={agg_spec.canonical()} "
           f"scan={n_scan or '-'} "
           f"data={'device' if device_data else 'host'}")
     t0 = time.time()
+    final_loss = float("nan")
     if args.defense == "btard" and n_scan:
         v_prev = jax.tree.map(jnp.zeros_like, params)
+        start_step = 0
+        state_path = mem_path = ""
+        if args.checkpoint_dir:
+            os.makedirs(args.checkpoint_dir, exist_ok=True)
+            state_path = os.path.join(args.checkpoint_dir, "state.msgpack")
+            mem_path = os.path.join(args.checkpoint_dir,
+                                    "membership.msgpack")
+        if args.resume:
+            example = {"params": params, "opt": opt_state, "v_prev": v_prev}
+            state, start_step, ck_meta = load_checkpoint(state_path, example)
+            params, opt_state, v_prev = (
+                state["params"], state["opt"], state["v_prev"]
+            )
+            mem_tree, mem_step, _ = load_checkpoint(mem_path)
+            if mem_step != start_step:
+                raise RuntimeError(
+                    f"checkpoint pair out of sync: state@{start_step} vs "
+                    f"membership@{mem_step} — a crash mid-save; rerun "
+                    "without --resume or restore the previous pair"
+                )
+            mem.restore_tree(mem_tree)
+            weights = jnp.asarray(mem.weights())
+            if start_step % n_scan:
+                raise RuntimeError(
+                    f"resume step {start_step} is not a multiple of "
+                    f"--scan-steps {n_scan}; use the original chunking"
+                )
+            print(f"resumed at step {start_step} "
+                  f"(banned={mem.banned_slots()}, arch={ck_meta.get('arch')})",
+                  flush=True)
         rem = args.steps % n_scan
         rem_fn = None
         if rem:
@@ -290,8 +372,15 @@ def main():
                 pipeline=pipe if device_data else None, extras=extras,
                 **flat_cost,
             )
-        for chunk in range(0, args.steps, n_scan):
+        for chunk in range(start_step, args.steps, n_scan):
             idxs = list(range(chunk, min(chunk + n_scan, args.steps)))
+            # membership events fire at the chunk boundary: every join/leave
+            # scheduled inside this chunk's window toggles its slot before
+            # the dispatch (chunk-granular churn — the weights vector is
+            # fixed for the compiled scan's duration)
+            for s in idxs:
+                mem.apply_events(s)
+            weights = jnp.asarray(mem.weights())
             if len(idxs) < n_scan:
                 step_fn = rem_fn
             steps_arr = jnp.asarray(idxs, jnp.int32)
@@ -310,6 +399,15 @@ def main():
                     params, opt_state, batches, steps_arr, seeds, byz_mask,
                     weights, v_prev,
                 )
+            # probation spot-checks: each scanned round reported every
+            # peer's deviation from its public-seed recompute; feed the
+            # probation slots' rows to the gate (ban on any mismatch,
+            # promote after a clean window)
+            probes = np.asarray(verif["probe_mismatch"], np.float64)
+            if probes.ndim == 1:
+                probes = probes[None]
+            for i, s in enumerate(idxs):
+                mem.observe_probe(probes[i], s)
             # ban policy applied between dispatches from the LAST round's
             # checksums (mid-chunk rounds share the chunk's weights)
             bad = bf.checksum_offender_peers(verif["checksum"][-1])
@@ -317,14 +415,33 @@ def main():
                 bad = []
             # audit-arm bans are unconditional: honest audits are exact
             # zeros, so a nonzero mismatch is a lie whatever the flags
-            weights = apply_bans(weights, bad, audit_offenders(verif))
+            weights = apply_bans(weights, idxs[-1], bad,
+                                 audit_offenders(verif))
+            final_loss = float(metrics["loss"][-1])
             if chunk % max(args.log_every, 1) == 0:
-                loss_last = float(metrics["loss"][-1])
-                print(f"step {idxs[-1]:4d} loss={loss_last:.4f}"
+                print(f"step {idxs[-1]:4d} loss={final_loss:.4f}"
                       f" checksum={float(metrics['checksum_max'][-1]):.2e}",
                       flush=True)
+            if state_path:
+                next_step = idxs[-1] + 1
+                save_checkpoint(
+                    state_path,
+                    {"params": params, "opt": opt_state, "v_prev": v_prev},
+                    step=next_step,
+                    meta={"arch": args.arch,
+                          "aggregator": agg_spec.canonical()},
+                )
+                save_checkpoint(mem_path, mem.to_tree(), step=next_step)
+                if args.halt_at is not None and next_step >= args.halt_at:
+                    print(f"halt requested at step {args.halt_at}: "
+                          f"checkpointed step {next_step}, exiting "
+                          "(resume with --resume)", flush=True)
+                    _print_summary(json, mem, byz, final_loss, next_step)
+                    return
     else:
         for step in range(args.steps):
+            mem.apply_events(step)
+            weights = jnp.asarray(mem.weights())
             batch = pipe.batch(step, extras=extras)
             if args.defense == "btard":
                 params, opt_state, metrics, verif = step_fn(
@@ -333,26 +450,41 @@ def main():
                 )
                 extra = (f" checksum={float(metrics['checksum_max']):.2e}"
                          f" votes={float(metrics['votes_max']):.0f}")
+                if isinstance(verif, dict) and "probe_mismatch" in verif:
+                    mem.observe_probe(
+                        np.asarray(verif["probe_mismatch"], np.float64), step
+                    )
                 # host-side ban policy: a violated partition checksum
                 # implicates its aggregating peer (partition j <-> peer j)
                 bad = bf.checksum_offender_peers(verif["checksum"])
                 if not (args.attack != "none" or args.agg_attack):
                     bad = []
-                weights = apply_bans(weights, bad, audit_offenders(verif))
+                weights = apply_bans(weights, step, bad,
+                                     audit_offenders(verif))
             else:
                 params, opt_state, metrics = step_fn(
                     params, opt_state, batch, jnp.int32(step)
                 )
                 extra = ""
+            final_loss = float(metrics["loss"])
             if step % args.log_every == 0:
-                print(f"step {step:4d} loss={float(metrics['loss']):.4f}{extra}",
+                print(f"step {step:4d} loss={final_loss:.4f}{extra}",
                       flush=True)
     dt = time.time() - t0
     print(f"done: {args.steps} steps in {dt:.1f}s ({dt/args.steps:.2f}s/step)")
+    _print_summary(json, mem, byz, final_loss, args.steps)
     if args.checkpoint:
         save_checkpoint(args.checkpoint, {"params": params, "opt": opt_state},
                         step=args.steps, meta={"arch": args.arch})
         print("checkpoint saved:", args.checkpoint)
+
+
+def _print_summary(json, mem, byz, final_loss, steps_done):
+    """One machine-parseable line for CI assertions (churn gauntlet)."""
+    s = mem.summary()
+    s.update(byzantine=sorted(byz), final_loss=final_loss,
+             steps_done=int(steps_done))
+    print("SUMMARY " + json.dumps(s), flush=True)
 
 
 if __name__ == "__main__":

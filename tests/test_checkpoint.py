@@ -1,0 +1,153 @@
+"""Checkpoint format guarantees (repro.checkpoint).
+
+The scan-resume bitwise property needs the restored state to be the SAME
+BITS, so the msgpack codec is held to exact-dtype round-trips (bf16 wire
+buffers, int8 codec state, the uint32 PRNG key chain), a format-version
+gate that rejects a stale layout with a clear error instead of a
+downstream shape crash, and writable restored arrays. The integration
+property: a ProtocolState checkpointed mid-run and restored continues the
+scan bitwise-identically to the uninterrupted run.
+"""
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import FORMAT_VERSION
+from repro.core import engine as eng
+from repro.core.protocol import AttackConfig
+
+N, D = 6, 24
+
+
+def test_dtype_fidelity_exact_bits(tmp_path):
+    """Every protocol-relevant dtype round-trips through its own byte
+    width: restored arrays have the same dtype AND the same bits."""
+    try:
+        import ml_dtypes  # noqa: F401
+
+        bf16 = jnp.bfloat16
+    except ImportError:  # pragma: no cover
+        bf16 = jnp.float32
+    tree = {
+        "f32": np.linspace(-1, 1, 7, dtype=np.float32),
+        "bf16": jnp.asarray([1.5, -2.25, 3e-8, 65504.0], bf16),
+        "int8": np.asarray([-128, -1, 0, 127], np.int8),
+        "i32": np.asarray([-(2**31), 2**31 - 1], np.int32),
+        # the MPRNG chain: raw uint32 key data, NOT a float detour
+        "key": np.asarray(jax.random.PRNGKey(7)),
+        "bool": np.asarray([True, False, True]),
+    }
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, tree, step=5, meta={"tag": "x"})
+    restored, step, meta = load_checkpoint(path, tree)
+    assert step == 5 and meta == {"tag": "x"}
+    for k, ref in tree.items():
+        got = np.asarray(restored[k])
+        ref = np.asarray(ref)
+        assert got.dtype == ref.dtype, (k, got.dtype, ref.dtype)
+        assert got.tobytes() == ref.tobytes(), k
+    assert np.asarray(restored["key"]).dtype == np.uint32
+
+
+def test_restored_arrays_are_writable(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, {"a": np.arange(4, dtype=np.float32)})
+    flat, _, _ = load_checkpoint(path)
+    flat["a"][0] = 99.0  # frombuffer views would raise here
+    assert flat["a"][0] == 99.0
+
+
+def test_format_version_mismatch_rejected_clearly(tmp_path):
+    """A checkpoint from another layout generation (including the
+    unversioned v1 seed format) must be refused with an error that names
+    the version, not fail later with a shape/index crash."""
+    path = str(tmp_path / "old.msgpack")
+    save_checkpoint(path, {"a": np.zeros(2, np.float32)}, step=3)
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    for stale in ({"format_version": FORMAT_VERSION + 1}, {}):
+        payload.pop("format_version", None)
+        payload.update(stale)
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        with pytest.raises(ValueError, match="format_version"):
+            load_checkpoint(path)
+
+
+def test_missing_array_named_in_error(tmp_path):
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, {"a": np.zeros(2, np.float32)})
+    with pytest.raises(KeyError, match="b"):
+        load_checkpoint(path, {"a": np.zeros(2, np.float32),
+                               "b": np.zeros(2, np.float32)})
+
+
+def test_atomic_save_preserves_previous_on_reload(tmp_path):
+    """os.replace semantics: after any completed save the file is a whole
+    checkpoint (the tmp file never becomes the destination partially)."""
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, {"a": np.zeros(3, np.float32)}, step=1)
+    save_checkpoint(path, {"a": np.ones(3, np.float32)}, step=2)
+    flat, step, _ = load_checkpoint(path)
+    assert step == 2 and np.all(flat["a"] == 1.0)
+    assert not (tmp_path / "ck.msgpack.tmp").exists()
+
+
+def test_protocol_state_roundtrip_resumes_scan_bitwise(tmp_path):
+    """The engine-level crash drill: run 8 rounds; separately run 4, save
+    the FULL ProtocolState (delay ring buffer in bf16, elastic ledgers,
+    PRNG key), restore, run 4 more — bans, ledgers and aggregates match
+    the uninterrupted run bitwise."""
+    cfg = eng.config_from_attack(
+        N, D, AttackConfig(kind="delayed_gradient", start_step=0, delay=3),
+        tau=1.0, clip_iters=30, m_validators=2, aggregator="verified:mean",
+        n_events=2, probation_steps=2,
+    )
+    byz = jnp.asarray([0, 0, 0, 0, 0, 1], jnp.float32)
+    events = [(2, "leave", 5), (4, "join", 5)]
+
+    w_true = jax.random.normal(jax.random.key(9), (D,))
+
+    def grads_fn(params, t, flips):
+        def peer_grad(i):
+            k = jax.random.key((i * 7919) % (2**31 - 1))
+            X = jax.random.normal(k, (4, D))
+            return 2 * X.T @ (X @ params - X @ w_true) / 4
+
+        G = jax.vmap(lambda i: peer_grad(i))(jnp.arange(N))
+        return G, G
+
+    params = jnp.zeros(D, jnp.float32)
+    run = lambda st, k: eng.scan_protocol(cfg, st, byz, params, grads_fn, k)
+
+    state0 = eng.init_state(cfg, seed=0, events=events)
+    full_state, _, full_outs = run(state0, 8)
+
+    half_state, _, _ = run(eng.init_state(cfg, seed=0, events=events), 4)
+    path = str(tmp_path / "state.msgpack")
+    save_checkpoint(path, half_state, step=4)
+    restored, step, _ = load_checkpoint(path, half_state)
+    assert step == 4
+    # the restore is bit-exact, dtypes included (bf16 ring buffer!)
+    for ref, got in zip(jax.tree.leaves(half_state),
+                        jax.tree.leaves(restored)):
+        assert np.asarray(got).dtype == np.asarray(ref).dtype
+        assert np.asarray(got).tobytes() == np.asarray(ref).tobytes()
+    resumed_state, _, resumed_outs = run(restored, 4)
+
+    np.testing.assert_array_equal(
+        np.asarray(resumed_outs.g_hat), np.asarray(full_outs.g_hat)[4:]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(resumed_outs.lifecycle),
+        np.asarray(full_outs.lifecycle)[4:],
+    )
+    for f in ("ban_step", "ban_reason", "id_ban_step", "id_accused",
+              "probation_clean", "slot_identity", "col_checked"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(resumed_state, f)),
+            np.asarray(getattr(full_state, f)), err_msg=f,
+        )

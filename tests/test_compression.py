@@ -304,6 +304,7 @@ def test_property_fused_dequant_kernels_match_ref(
 # ---------------------------------------------------------------------------
 # The adversarial attack x codec engine grid
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("codec", comp.CODECS)
 @pytest.mark.parametrize("attack", sorted(ATTACKS))
 def test_grid_bans_byzantine_and_scan_equals_stepwise(attack, codec):
@@ -335,6 +336,7 @@ def test_grid_bans_byzantine_and_scan_equals_stepwise(attack, codec):
                 assert ban_step[i] == -1, f"{label}: honest peer {i} banned"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("codec", comp.CODECS)
 def test_honest_runs_have_zero_accusations(codec):
     """50 honest steps per codec, both engines: not a single peer or system

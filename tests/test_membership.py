@@ -1,0 +1,391 @@
+"""Elastic membership inside the scan engine (core.engine + core.sybil).
+
+The load-bearing properties of the slot-lifecycle machinery:
+
+* fixed-mode neutrality: giving a config elastic CAPACITY (n_events > 0)
+  without scheduling any events changes NOTHING — every output is bitwise
+  identical to the fixed-peer-set engine;
+* any join/leave/ban interleaving produces the same lifecycle/active
+  masks, ban ledgers and identity ledgers whether the rounds run stepwise
+  or under one ``lax.scan`` (hypothesis property — the schedule is drawn
+  at random, invalid events must no-op identically in both engines);
+* a joining peer is held in probation at weight ZERO: until promotion the
+  aggregate is bitwise the aggregate of the run where the slot stayed
+  vacant, and a clean probation window flips the slot active;
+* the rejoin-under-new-key adversary: a banned Byzantine peer that leaves
+  and rejoins with a fresh identity is re-vetted in probation, caught by
+  the public-seed spot-check, and re-banned (BAN_SYBIL) WITHOUT its
+  gradient ever entering the aggregate; a same-key rejoin lands directly
+  in BANNED at admission (identity ledger lookup);
+* churn never launders history: identity ban entries survive leave/rejoin
+  and the column-staleness ledger (col_checked) is monotone through
+  membership events.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import engine as eng
+from repro.core import sybil
+from repro.core.attacks import rejoin_under_new_key
+from repro.core.protocol import AttackConfig
+
+N, D = 6, 24
+STEPS = 12
+
+
+def _grads_fn(n=N, d=D):
+    w_true = jax.random.normal(jax.random.key(9), (d,))
+
+    def peer_grad(peer, step, params):
+        k = jax.random.key((peer * 7919 + step) % (2**31 - 1))
+        X = jax.random.normal(k, (4, d))
+        return 2 * X.T @ (X @ params - X @ w_true) / 4
+
+    def grads_fn(params, t, flips):
+        G = jax.vmap(lambda i: peer_grad(i, t, params))(jnp.arange(n))
+        return G, G
+
+    return grads_fn
+
+
+def _cfg(attack_kw=None, **kw):
+    kw.setdefault("tau", 1.0)
+    kw.setdefault("clip_iters", 30)
+    kw.setdefault("m_validators", 2)
+    kw.setdefault("aggregator", "verified:mean")
+    att = AttackConfig(start_step=0, **(attack_kw or dict(kind="none")))
+    return eng.config_from_attack(N, D, att, **kw)
+
+
+def _run_stepwise(cfg, byz_mask, steps, events=None, vacant=()):
+    step_fn = eng.jit_protocol_step(cfg)
+    grads_fn = _grads_fn()
+    state = eng.init_state(cfg, seed=0, events=events, vacant=vacant)
+    params = jnp.zeros(D, jnp.float32)
+    flips = jnp.zeros((N,), bool)
+    outs, states = [], []
+    for _ in range(steps):
+        G, H = grads_fn(params, state.step, flips)
+        state, out = step_fn(state, byz_mask, G, H)
+        outs.append(out)
+        states.append(state)
+    return state, outs, states
+
+
+def _run_scan(cfg, byz_mask, steps, events=None, vacant=()):
+    grads_fn = _grads_fn()
+    return jax.jit(
+        lambda s, b, p: eng.scan_protocol(cfg, s, b, p, grads_fn, steps)
+    )(
+        eng.init_state(cfg, seed=0, events=events, vacant=vacant),
+        byz_mask,
+        jnp.zeros(D, jnp.float32),
+    )
+
+
+def _stack(outs, field):
+    return np.stack([np.asarray(getattr(o, field)) for o in outs])
+
+
+# ---------------------------------------------------------------------------
+# Fixed-mode neutrality
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("attack_kw", [dict(kind="none"),
+                                       dict(kind="sign_flip", lam=1.0)])
+def test_elastic_capacity_without_events_is_bitwise_neutral(attack_kw):
+    """n_events > 0 with an inert schedule must not perturb a single bit:
+    every existing config keeps its exact trajectory when the membership
+    machinery is compiled in but idle."""
+    byz = jnp.asarray([0, 0, 0, 0, 0, 1], jnp.float32)
+    state_fix, _, outs_fix = _run_scan(_cfg(attack_kw), byz, STEPS)
+    state_el, _, outs_el = _run_scan(
+        _cfg(attack_kw, n_events=4, probation_steps=2), byz, STEPS
+    )
+    np.testing.assert_array_equal(
+        np.asarray(outs_el.g_hat), np.asarray(outs_fix.g_hat)
+    )
+    for f in ("banned_now", "ban_reason_now", "accuse_mat", "sys_accuse",
+              "n_active", "validators", "lifecycle"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs_el, f)), np.asarray(getattr(outs_fix, f))
+        )
+    np.testing.assert_array_equal(
+        np.asarray(state_el.ban_step), np.asarray(state_fix.ban_step)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Probation: weight zero until a clean window promotes
+# ---------------------------------------------------------------------------
+def test_join_is_weight_zero_until_clean_window_promotes():
+    """A fresh honest joiner never touches the aggregate during probation
+    (bitwise vs the slot staying vacant), then flips ACTIVE exactly after
+    probation_steps clean spot-checks."""
+    probation = 3
+    join_step = 2
+    cfg = _cfg(n_events=2, probation_steps=probation)
+    byz = jnp.zeros((N,), jnp.float32)
+    ev = [(join_step, "join", 2)]
+    _, _, outs_join = _run_scan(cfg, byz, STEPS, events=ev, vacant=(2,))
+    _, _, outs_vac = _run_scan(cfg, byz, STEPS, events=None, vacant=(2,))
+
+    life = np.asarray(outs_join.lifecycle)  # post-step lifecycle per step
+    # probation window: joined at join_step, clean checks at join_step ..
+    # join_step+probation-1, so the promote lands at that last step's end
+    promote_step = join_step + probation - 1
+    for t in range(join_step, promote_step):
+        assert life[t, 2] == eng.SLOT_PROBATION, life[:, 2]
+    assert life[promote_step, 2] == eng.SLOT_ACTIVE, life[:, 2]
+    # never in the aggregate before promotion: bitwise equal to the run
+    # where the slot simply stays vacant
+    np.testing.assert_array_equal(
+        np.asarray(outs_join.g_hat)[: promote_step + 1],
+        np.asarray(outs_vac.g_hat)[: promote_step + 1],
+    )
+    # ... and after promotion it IS a member (the aggregate moves)
+    assert np.any(
+        np.asarray(outs_join.g_hat)[promote_step + 1 :]
+        != np.asarray(outs_vac.g_hat)[promote_step + 1 :]
+    )
+    assert np.asarray(outs_join.n_active)[-1] == N - 1 + 1
+
+
+# ---------------------------------------------------------------------------
+# The rejoin adversary (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+def test_rejoin_under_new_key_rebanned_without_entering_aggregate():
+    """Banned Byzantine slot leaves, rejoins under a FRESH identity while
+    still attacking: the probation spot-check catches it (BAN_SYBIL), both
+    identities end on the identity ban ledger, and the aggregate is
+    bitwise the aggregate of the run where it never came back."""
+    byz_slot = 5
+    byz = jnp.asarray([1.0 if i == byz_slot else 0.0 for i in range(N)])
+    leave, rejoin = 6, 8
+    cfg = _cfg(dict(kind="sign_flip", lam=1.0), n_events=2,
+               probation_steps=3)
+    ev_back = [(leave, "leave", byz_slot), (rejoin, "join", byz_slot)]
+    ev_gone = [(leave, "leave", byz_slot)]
+    st_back, _, outs_back = _run_scan(cfg, byz, STEPS, events=ev_back)
+    cfg_gone = _cfg(dict(kind="sign_flip", lam=1.0), n_events=2,
+                    probation_steps=3)
+    _, _, outs_gone = _run_scan(cfg_gone, byz, STEPS, events=ev_gone)
+
+    life = np.asarray(outs_back.lifecycle)
+    # banned while active (the verification arm), well before it leaves
+    assert eng.SLOT_BANNED in life[:leave, byz_slot]
+    # after the rejoin the slot is NEVER active again: probation -> banned
+    assert not np.any(life[rejoin:, byz_slot] == eng.SLOT_ACTIVE)
+    assert life[-1, byz_slot] == eng.SLOT_BANNED
+    # the sybil gate is the arm that caught it
+    reasons = np.asarray(outs_back.ban_reason_now)[rejoin:, byz_slot]
+    banned_rows = np.asarray(outs_back.banned_now)[rejoin:, byz_slot]
+    assert banned_rows.any()
+    assert reasons[banned_rows.argmax()] == eng.BAN_SYBIL
+    # both keys are on the identity ledger: the original identity and the
+    # fresh one minted at rejoin
+    id_ban = np.asarray(st_back.id_ban_step)
+    assert id_ban[byz_slot] >= 0 and id_ban[N] >= 0
+    # "never entered the aggregate" is bitwise, not approximate
+    np.testing.assert_array_equal(
+        np.asarray(outs_back.g_hat), np.asarray(outs_gone.g_hat)
+    )
+    # no honest peer was accused or banned anywhere in this drama
+    honest = [i for i in range(N) if i != byz_slot]
+    assert not np.asarray(outs_back.banned_now)[:, honest].any()
+    assert not np.asarray(outs_back.accuse_mat)[:, :, honest].any()
+
+
+def test_same_key_rejoin_lands_directly_banned():
+    """Rejoining with the banned IDENTITY (not a fresh key) is refused at
+    admission: the identity ledger restores BANNED + the original ban step
+    and reason into the slot."""
+    byz_slot = 5
+    byz = jnp.asarray([1.0 if i == byz_slot else 0.0 for i in range(N)])
+    leave, rejoin = 6, 8
+    cfg = _cfg(dict(kind="sign_flip", lam=1.0), n_events=2)
+    # explicit identity == the slot's original (banned) identity
+    ev = [(leave, "leave", byz_slot), (rejoin, "join", byz_slot, byz_slot)]
+    st, _, outs = _run_scan(cfg, byz, STEPS, events=ev)
+    life = np.asarray(outs.lifecycle)
+    assert not np.any(life[rejoin:, byz_slot] == eng.SLOT_PROBATION)
+    assert np.all(life[rejoin:, byz_slot] == eng.SLOT_BANNED)
+    # the restored slot ledger carries the ORIGINAL ban step
+    orig_ban = int(np.asarray(st.id_ban_step)[byz_slot])
+    assert 0 <= orig_ban < leave
+    assert int(np.asarray(st.ban_step)[byz_slot]) == orig_ban
+
+
+def test_churn_never_resets_identity_ledger_or_col_checked():
+    """Through every leave/rejoin the identity ban entry is immutable once
+    written, and col_checked (column audit staleness, a property of the
+    topology not the occupant) is monotone non-decreasing."""
+    byz_slot = 5
+    byz = jnp.asarray([1.0 if i == byz_slot else 0.0 for i in range(N)])
+    cfg = _cfg(dict(kind="sign_flip", lam=1.0), n_events=4, audit_k=2,
+               m_validators=1)
+    ev = [(5, "leave", byz_slot), (7, "join", byz_slot)]
+    _, _, states = _run_stepwise(cfg, byz, STEPS, events=ev)
+    prev_col = np.full((N,), -1)
+    ban_entry = None
+    for st in states:
+        col = np.asarray(st.col_checked)
+        assert np.all(col >= prev_col), (col, prev_col)
+        prev_col = col
+        id_ban = int(np.asarray(st.id_ban_step)[byz_slot])
+        if ban_entry is None and id_ban >= 0:
+            ban_entry = id_ban
+        if ban_entry is not None:
+            assert id_ban == ban_entry  # written once, never moves
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property: any interleaving, stepwise == scan
+# ---------------------------------------------------------------------------
+def _random_schedule(seed, n_events):
+    """A (possibly nonsensical) interleaving — invalid rows (leave of a
+    vacant slot, join onto an occupied one) must no-op identically in both
+    engines, so the draw is unconstrained."""
+    rng = np.random.RandomState(seed)
+    return [
+        (int(rng.randint(0, STEPS)),
+         "join" if rng.rand() < 0.5 else "leave",
+         int(rng.randint(0, N)))
+        for _ in range(int(rng.randint(1, n_events + 1)))
+    ]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       attacked=st.booleans())
+def test_any_interleaving_scan_equals_stepwise(seed, attacked):
+    """For ANY join/leave schedule (with bans landing mid-flight when the
+    attack is on), the scanned engine and the stepwise engine agree on the
+    lifecycle/active masks, the slot and identity ban ledgers, and the
+    aggregates."""
+    n_events = 4
+    att = dict(kind="sign_flip", lam=1.0) if attacked else dict(kind="none")
+    cfg = _cfg(att, n_events=n_events, probation_steps=2)
+    byz = jnp.asarray([0, 0, 0, 0, 0, 1], jnp.float32)
+    ev = _random_schedule(seed, n_events)
+    vacant = (0,) if seed % 2 else ()
+
+    st_sw, outs_sw, _ = _run_stepwise(cfg, byz, STEPS, events=ev,
+                                      vacant=vacant)
+    st_sc, _, outs_sc = _run_scan(cfg, byz, STEPS, events=ev, vacant=vacant)
+
+    for f in ("lifecycle", "banned_now", "ban_reason_now", "n_active",
+              "validators", "sampled_parts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs_sc, f)), _stack(outs_sw, f), err_msg=f
+        )
+    for f in ("ban_step", "ban_reason", "lifecycle", "slot_identity",
+              "probation_clean", "id_ban_step", "id_ban_reason",
+              "id_accused", "active", "col_checked"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_sc, f)), np.asarray(getattr(st_sw, f)),
+            err_msg=f,
+        )
+    np.testing.assert_array_equal(
+        np.asarray(outs_sc.g_hat), _stack(outs_sw, "g_hat")
+    )
+
+
+# ---------------------------------------------------------------------------
+# The acceptance churn grid:
+# {join, leave, rejoin-banned-identity} x {butterfly_clip, verified:mean}
+# x {stepwise, scan}
+# ---------------------------------------------------------------------------
+BAN_WITHIN = 5  # acceptance: banned <= 5 steps after (re)activation
+
+CHURN_CASES = {
+    # an honest peer joins a vacant slot mid-attack
+    "join": dict(events=[(3, "join", 0)], vacant=(0,)),
+    # the attacker leaves after being banned; capacity is reclaimed
+    "leave": dict(events=[(6, "leave", 5)], vacant=()),
+    # the banned attacker rejoins its slot under a fresh key
+    "rejoin": dict(events=rejoin_under_new_key(5, 6, 8), vacant=()),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("agg", ["butterfly_clip", "verified:mean"])
+@pytest.mark.parametrize("case", sorted(CHURN_CASES))
+def test_churn_grid_bans_fast_no_slander_scan_equals_stepwise(case, agg):
+    """Every churn pattern x both verifiable aggregators: the Byzantine
+    slot is banned within BAN_WITHIN steps of every activation (initial
+    AND rejoin), honest peers collect zero accusations, and the stepwise
+    and scanned engines agree on the ban ledgers bitwise."""
+    kw = CHURN_CASES[case]
+    byz_slot = 5
+    byz = jnp.asarray([1.0 if i == byz_slot else 0.0 for i in range(N)])
+    # clip_iters=200 runs the flagship's CenteredClip to its fixed point so
+    # the V2 checksum is honest-clean (same rationale as the PR 5 grid)
+    cfg = _cfg(dict(kind="sign_flip", lam=1.0), n_events=2,
+               probation_steps=3, clip_iters=200, aggregator=agg)
+    st_sw, outs_sw, _ = _run_stepwise(cfg, byz, STEPS, **kw)
+    st_sc, _, outs_sc = _run_scan(cfg, byz, STEPS, **kw)
+
+    # scan == stepwise: ban + identity ledgers bitwise
+    for f in ("ban_step", "ban_reason", "lifecycle", "slot_identity",
+              "id_ban_step", "id_ban_reason", "id_accused"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_sc, f)), np.asarray(getattr(st_sw, f)),
+            err_msg=f"{case}/{agg}: {f}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(outs_sc.banned_now), _stack(outs_sw, "banned_now")
+    )
+
+    # banned <= BAN_WITHIN steps after every activation window's start
+    life = np.asarray(outs_sc.lifecycle)
+    banned_now = np.asarray(outs_sc.banned_now)
+    assert banned_now[:BAN_WITHIN, byz_slot].any(), f"{case}/{agg}"
+    if case == "leave":
+        # the slot vacates (capacity reclaimed) but the ban survives on
+        # the IDENTITY ledger
+        assert life[-1, byz_slot] == eng.SLOT_VACANT, f"{case}/{agg}"
+        assert np.asarray(st_sc.id_ban_step)[byz_slot] >= 0
+    else:
+        assert life[-1, byz_slot] == eng.SLOT_BANNED, f"{case}/{agg}"
+    if case == "rejoin":
+        # the rejoined key is caught within the window too, from probation
+        assert banned_now[8 : 8 + BAN_WITHIN, byz_slot].any()
+        assert not np.any(life[8:, byz_slot] == eng.SLOT_ACTIVE)
+
+    # zero honest accusations / bans, in any direction
+    honest = [i for i in range(N) if i != byz_slot]
+    assert not np.asarray(outs_sc.banned_now)[:, honest].any()
+    assert not np.asarray(outs_sc.accuse_mat)[:, :, honest].any()
+    assert not np.asarray(outs_sc.sys_accuse)[:, honest].any()
+
+
+# ---------------------------------------------------------------------------
+# Host mirror (launch path): same lifecycle rules, checkpoint round-trip
+# ---------------------------------------------------------------------------
+def test_host_membership_mirrors_engine_lifecycle():
+    mem = sybil.HostMembership(4, probation_steps=2,
+                               events=sybil.parse_churn("leave@2:1,join@4:1"))
+    mem.ban_slots({1}, 0)
+    for s in range(2):
+        mem.apply_events(s)
+    assert mem.lifecycle[1] == sybil.SLOT_BANNED
+    mem.apply_events(2)  # leave: slot vacates, identity ledger keeps the ban
+    assert mem.lifecycle[1] == sybil.SLOT_VACANT
+    assert 1 in mem.banned_identities
+    mem.apply_events(3)
+    mem.apply_events(4)  # fresh identity joins into probation
+    assert mem.lifecycle[1] == sybil.SLOT_PROBATION
+    assert mem.weights()[1] == 0.0
+    # a dirty probe re-bans; the fresh identity joins the ledger too
+    mem.observe_probe(np.asarray([0.0, 1.0, 0.0, 0.0]), 4)
+    assert mem.lifecycle[1] == sybil.SLOT_BANNED
+    assert set(mem.banned_identities) >= {1, 4}
+    # checkpoint round-trip restores the full ledger
+    clone = sybil.HostMembership(4, probation_steps=2)
+    clone.restore_tree(mem.to_tree())
+    assert list(clone.lifecycle) == list(mem.lifecycle)
+    assert clone.banned_identities == mem.banned_identities
+    assert clone.next_identity == mem.next_identity

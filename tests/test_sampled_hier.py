@@ -179,6 +179,7 @@ def test_unsampled_cheating_aggregator_banned_within_window():
 # ---------------------------------------------------------------------------
 # Mode x aggregator attack grid
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("agg", ["verified:mean", "butterfly_clip"])
 @pytest.mark.parametrize(
     "kw",

@@ -110,6 +110,7 @@ def _run_scan(cfg, byz_mask, steps):
 # ---------------------------------------------------------------------------
 # The adversarial grid: attack x aggregator x {stepwise, scan}
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 @pytest.mark.parametrize("attack", sorted(ATTACKS))
 @pytest.mark.parametrize("spec", GRID_SPECS, ids=lambda s: s.name)
 def test_grid_bans_byzantine_and_scan_equals_stepwise(spec, attack):
@@ -151,6 +152,7 @@ def test_grid_bans_byzantine_and_scan_equals_stepwise(spec, attack):
             )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("spec", GRID_SPECS, ids=lambda s: s.name)
 def test_honest_runs_have_zero_accusations(spec):
     """50 honest steps, both engines: not a single peer or system
