@@ -9,7 +9,7 @@ RG-LRU/attention, dense-then-MoE) exact.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -308,7 +308,11 @@ def register_compressed_wrappers():
             weighted=base_def.weighted,
             warm_startable=base_def.warm_startable,
             adaptive=base_def.adaptive,
-            coordinatewise=base_def.coordinatewise,
+            # NOT inherited: the quantization scale of each wire payload is
+            # a max over the whole partition, so a coordinate slice
+            # quantizes with different scales than the full vector —
+            # split/concat is no longer bitwise (btard-lint C5)
+            coordinatewise=False,
         ))
 
 

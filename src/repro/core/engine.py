@@ -42,7 +42,7 @@ in ``tests/test_engine.py``.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
 import jax
@@ -1275,3 +1275,99 @@ def make_scan_runner(cfg: EngineConfig, grads_fn, n_steps: int,
             cfg, state, byz_mask, params, grads_fn, n_steps, update_fn
         )
     )
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis hooks (tools.analysis / btard-lint)
+# ---------------------------------------------------------------------------
+def abstract_state(cfg: EngineConfig) -> ProtocolState:
+    """:class:`ProtocolState` as a pytree of ``ShapeDtypeStruct`` leaves —
+    the abstract scan carry btard-lint traces the step with (no arrays are
+    materialized, no devices are touched)."""
+    return jax.eval_shape(lambda: init_state(cfg))
+
+
+def traceable_phases(cfg: EngineConfig) -> dict:
+    """name -> (fn, abstract_args) for every phase this config exercises,
+    with argument avals wired exactly as :func:`protocol_step` passes them
+    (intermediate shapes derived via ``jax.eval_shape`` chaining, never
+    hand-written). btard-lint traces each entry with ``jax.make_jaxpr``
+    and asserts purity — no host callbacks, no effects, no PRNG outside
+    the :func:`_phase_key` fold-in chain — so a violation is pinned to the
+    phase that introduced it rather than to the fused step."""
+    n, d = cfg.n, cfg.d
+    state = abstract_state(cfg)
+    aval = jax.ShapeDtypeStruct
+    G = aval((n, d), jnp.float32)
+    byz = aval((n,), jnp.bool_)
+    weights = aval((n,), jnp.float32)
+    seed = aval((), jnp.int32)
+    spec = cfg.agg_spec()
+
+    phases = {
+        "phase_membership": (
+            functools.partial(phase_membership, cfg), (state,)),
+        "phase_attack": (
+            functools.partial(phase_attack, cfg), (state, G, G, byz)),
+        "phase_mprng": (
+            functools.partial(phase_mprng, cfg), (state, byz)),
+    }
+
+    if spec.verifiable and cfg.hierarchical:
+        samp_mask = aval((n,), jnp.bool_) if cfg.audit_k is not None else None
+        if comp_mod.is_wrapped(spec):
+            codec = comp_mod.codec_of(spec)
+            gs = n // cfg.groups
+            G_cmp = jax.eval_shape(
+                lambda g: comp_mod.wire_grads(g, codec, gs), G)
+        else:
+            G_cmp = G
+        phases["phase_hier"] = (
+            functools.partial(phase_hier, cfg),
+            (state, byz, weights, seed, G, G_cmp, G_cmp, samp_mask, byz))
+        return phases
+
+    samp_idx = None
+    if spec.verifiable and cfg.audit_k is not None:
+        samp_idx, _ = jax.eval_shape(
+            lambda s: hier_mod.sample_audit_cells(
+                _phase_key(s, 6), s.step, s.col_checked,
+                cfg.m_validators, cfg.audit_k, cfg.n), state)
+    agg_fn = functools.partial(phase_aggregation, cfg)
+    phases["phase_aggregation"] = (
+        agg_fn, (state, G, weights, seed, samp_idx))
+    if not spec.verifiable:
+        # mean/median/krum baselines: no tables, verify/accuse degrade to
+        # no-ops in protocol_step, so aggregation is the last traced phase
+        return phases
+
+    agg, parts, z, s_tbl, norm_tbl, _ = jax.eval_shape(
+        agg_fn, state, G, weights, seed, samp_idx)
+    att_fn = functools.partial(phase_aggregator_attack, cfg)
+    phases["phase_aggregator_attack"] = (
+        att_fn, (state, agg, parts, z, byz, weights, samp_idx))
+    if s_tbl is None:  # aggregator-attack configs compute tables post-shift
+        _, _, _, s_tbl, norm_tbl = jax.eval_shape(
+            att_fn, state, agg, parts, z, byz, weights, samp_idx)
+    corrupt = aval((cfg.n_parts,), jnp.bool_)
+    active = aval((n,), jnp.float32)
+    phases["phase_misreport"] = (
+        functools.partial(phase_misreport, cfg),
+        (s_tbl, corrupt, byz, active, weights))
+    if comp_mod.is_wrapped(spec):
+        G_cmp = jax.eval_shape(
+            lambda g: comp_mod.wire_grads(
+                g, comp_mod.codec_of(spec), cfg.n_parts), G)
+    else:
+        G_cmp = G
+    ver_fn = functools.partial(phase_verify, cfg)
+    ver_args = (state, G_cmp, G_cmp, agg, agg, parts, s_tbl, s_tbl,
+                norm_tbl, norm_tbl, byz, weights)
+    phases["phase_verify"] = (ver_fn, ver_args)
+    accuse, sys_accuse, mismatch_s, _, _, _ = jax.eval_shape(
+        ver_fn, *ver_args)
+    phases["phase_accuse_ban"] = (
+        functools.partial(phase_accuse_ban, cfg),
+        (state, accuse, sys_accuse, mismatch_s, byz, G_cmp, G_cmp,
+         agg, agg, s_tbl, s_tbl, norm_tbl, norm_tbl))
+    return phases

@@ -15,8 +15,7 @@ independent of the model size d.
 from __future__ import annotations
 
 import hashlib
-import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 def _h(i: int, x: int, salt: bytes) -> bytes:

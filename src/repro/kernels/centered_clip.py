@@ -794,7 +794,9 @@ def verify_tables_pallas(
         _vt_kernel,
         grid=(n_blocks,),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b: (0, 0)),
+            # scalar: whole (1, 1) array in SMEM — a (1, 1) VMEM block is
+            # an illegal sub-tile on real TPUs (the PR 2 bug class)
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((n, blk), lambda b: (0, b)),
             pl.BlockSpec((1, blk), lambda b: (0, b)),
             pl.BlockSpec((1, blk), lambda b: (0, b)),

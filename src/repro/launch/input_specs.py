@@ -7,11 +7,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import INPUT_SHAPES, get_config
 from repro.models import Model
-from repro.sharding import batch_axes, param_specs
+from repro.sharding import batch_axes
 from repro.sharding.specs import activation_spec
 
 

@@ -23,7 +23,6 @@ Three step kinds per architecture:
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +39,6 @@ from repro.launch import input_specs as ispecs
 from repro.models import Model
 from repro.optim.optimizers import apply_updates
 from repro.sharding import param_specs, set_mesh
-from repro.sharding.specs import activation_spec
 
 
 def _named(mesh, spec_tree):
@@ -260,6 +258,9 @@ def aggregation_stage(
             stack = jax.lax.all_gather(stack, join, axis=1, tiled=True)
             if v0 is not None:
                 v0 = jax.lax.all_gather(v0, join, axis=0, tiled=True)
+        # pin the gathered transport dtype before the f32 upcast below —
+        # same hoist hazard as the butterfly barrier at the all_to_all
+        stack = jax.lax.optimization_barrier(stack)
         agg_fn = spec.build(n_peers, stack.shape[1], use_pallas=use_pallas)
         flat, info = agg_fn(
             stack.astype(jnp.float32),
@@ -545,14 +546,18 @@ def _emit_tables(g_vec, d, pad, agg, s_local, norms_local, iters_used,
         full = jax.lax.all_gather(
             v2.astype(g_vec.dtype), peer_axes, tiled=True,
             axis_index_groups=lvl1_groups,
-        ).astype(jnp.float32)  # (gs*part,) == padded d, same in every group
+        )  # (gs*part,) == padded d, same in every group
+        # barrier before the upcast: the gather must ship transport dtype
+        full = jax.lax.optimization_barrier(full).astype(jnp.float32)
     else:
         # broadcast the scalar tables (O(n^2) data total — size-independent)
         s_table = jax.lax.all_gather(s_local, peer_axes)  # (n_parts, n_peers)
         norm_table = jax.lax.all_gather(norms_local, peer_axes)
         full = jax.lax.all_gather(
             agg.astype(g_vec.dtype), peer_axes, tiled=True
-        ).astype(jnp.float32)  # (n_peers*part,) — gather in transport dtype
+        )  # (n_peers*part,) — gather in transport dtype
+        # barrier before the upcast: the gather must ship transport dtype
+        full = jax.lax.optimization_barrier(full).astype(jnp.float32)
     if pad:
         full = full[:d]
     # checksum/votes are per-partition (expand-dims -> peer-axis out spec);
@@ -804,7 +809,10 @@ def _build_btard_step(
     def step_core(params, opt_state, batch, step, seed, byz_mask, weights,
                   v_prev=None):
         loss, grads = stage1(params, batch)
-        key = jax.random.fold_in(jax.random.key(0), step)
+        # attack key from the traced (seed, step) pair — a literal-seeded
+        # key here would be randomness outside the protocol transcript
+        # (btard-lint purity rule; the MPRNG chain covers all other keys)
+        key = jax.random.fold_in(jax.random.key(seed), step)
         rest = (v_prev,) if carry_v0 else ()
         agg, verif = stage2(grads, seed, byz_mask, weights, key, *rest)
         updates, opt_state = optimizer.update(agg, opt_state, params, step)

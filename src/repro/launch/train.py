@@ -29,7 +29,6 @@ Examples (CPU bring-up, 8 fake devices):
 """
 import argparse
 import os
-import sys
 import time
 import warnings
 

@@ -10,7 +10,6 @@ load-balance auxiliary loss is returned.
 from __future__ import annotations
 
 import jax
-import numpy as np
 import jax.numpy as jnp
 
 from repro.models.layers import act_fn, cdtype, dense_init, mlp_init, apply_mlp

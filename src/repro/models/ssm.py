@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.layers import cdtype, conv1d_init, causal_conv1d, causal_conv1d_step, dense_init
 from repro.sharding import shard

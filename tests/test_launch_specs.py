@@ -2,7 +2,6 @@
 every (arch x shape), and the restarted BTARD variant converges."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_applicable

@@ -1,11 +1,9 @@
 """Model-internal invariants: attention path equivalences, SSD vs naive
 recurrence, RG-LRU vs step recurrence, MoE dispatch exactness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.models.attention import (

@@ -3,7 +3,6 @@ each assigned family runs one forward/train step on CPU with correct output
 shapes and no NaNs, plus the prefill/decode cache-consistency check."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import list_archs

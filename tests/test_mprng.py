@@ -1,6 +1,5 @@
 """MPRNG commit/reveal protocol tests (paper App. A.2)."""
 import numpy as np
-import pytest
 
 from repro.core.mprng import AbortingPeer, LyingPeer, MPRNGPeer, run_mprng
 

@@ -134,6 +134,24 @@ def test_verify_tables_batched_lowers_natively():
     )
 
 
+def test_verify_tables_lowers_natively():
+    """The single (unbatched) verification kernel — its SMEM tau operand
+    is exactly the (1, 1)-block class the Mosaic pass rejects."""
+    xs = _stack(20, (N, D))
+    v = _stack(21, (D,))
+    z = _stack(22, (D,))
+    out = _validate(
+        lambda x, vv, zz: _k.verify_tables_pallas(
+            x, vv, zz, 1.0, interpret=False
+        ),
+        xs, v, z,
+    )
+    if out is not None:
+        ref = _k.verify_tables_pallas(xs, v, z, 1.0, interpret=True)
+        for got, want in zip(out, ref):
+            np.testing.assert_allclose(got, np.asarray(want), atol=1e-5)
+
+
 def test_digest_tables_batched_lowers_natively():
     """The generalized verification wrapper's standalone digest pass
     (s_i = <z, x_i - v>, ||x_i - v||, no clip weight) through the real

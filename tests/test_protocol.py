@@ -1,6 +1,5 @@
 """BTARD protocol state-machine tests (paper Alg. 4-7 + App. C attack zoo)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

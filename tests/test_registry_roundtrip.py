@@ -1,0 +1,56 @@
+"""Property test: aggregator-spec names are a lossless wire format.
+
+Configs cross process boundaries as canonical strings (CLI flags,
+checkpoint metadata, the launch manifest) — ``parse -> canonical ->
+parse`` must be the identity for EVERY registered aggregator under any
+typed parameter assignment, or two peers can disagree about the protocol
+they are running. btard-lint checks one alternate assignment statically
+(tools/analysis/contracts.py C1); this property test sweeps the space.
+"""
+import jax  # noqa: F401  (forces the cpu-pinning conftest import order)
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import aggregators as agg_mod
+
+_NAMES = agg_mod.registered_aggregators()
+
+
+def _value_for(name, default, fval, ival, bval, codec):
+    if name == "codec":
+        return codec
+    if isinstance(default, bool):
+        return bval
+    if isinstance(default, float):
+        return fval
+    return ival  # int params and the None-defaulted n_byzantine
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(_NAMES),
+    fval=st.floats(min_value=1e-3, max_value=16.0),
+    ival=st.integers(min_value=1, max_value=64),
+    bval=st.booleans(),
+    codec=st.sampled_from(["int8", "bf16"]),
+)
+def test_spec_roundtrip_with_nondefault_params(name, fval, ival, bval, codec):
+    defn = agg_mod.REGISTRY[name]
+    params = {
+        k: _value_for(k, v, fval, ival, bval, codec)
+        for k, v in defn.defaults
+    }
+    spec = agg_mod.AggregatorSpec(name, tuple(sorted(params.items())))
+    canon = spec.canonical()
+    again = agg_mod.AggregatorSpec.parse(canon)
+    assert again == spec
+    assert again.canonical() == canon
+    # param values survive with their types intact, not just their repr
+    assert again.param_dict() == params
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=st.sampled_from(_NAMES))
+def test_bare_name_roundtrip(name):
+    spec = agg_mod.AggregatorSpec.parse(name)
+    assert agg_mod.AggregatorSpec.parse(spec.canonical()) == spec

@@ -1,5 +1,4 @@
 """Optimizers, schedules, data pipeline, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp

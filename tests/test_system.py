@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
 from repro.data import TokenPipeline

@@ -1,0 +1,69 @@
+"""btard-lint: static invariant checks for the BTARD protocol stack.
+
+Four layers, all jaxpr/abstract-eval based — no TPU, no multi-host ring,
+no concrete training step required:
+
+1. ``jaxpr_checks`` — engine purity (no host callbacks, no off-chain PRNG
+   seeds inside any protocol phase) and scan-carry stability across the
+   engine's tagged config matrix.
+2. ``wire_dtype`` — the launch-layer collective contract: payload
+   collectives ship the declared wire/transport dtype, upcasts are pinned
+   behind ``optimization_barrier`` so XLA cannot hoist them across the
+   wire, digests stay float32.
+3. ``contracts`` — AggregatorSpec registry: name round-trips, capability
+   flags vs traced behavior, bitwise coordinatewise splits.
+4. ``kernels_check`` — Pallas completeness (oracle + wrapper + Mosaic
+   lowering test per kernel) and TPU block-spec legality by abstract eval.
+
+Run ``python -m tools.analysis`` (see ``__main__``) or call
+:func:`run_checks` directly.
+"""
+from __future__ import annotations
+
+from tools.analysis.common import CheckResult, Finding  # noqa: F401
+
+
+def _registry():
+    # imports deferred: each module traces against src/repro on import of
+    # its check functions, and the CLI wants --list to be instant
+    from tools.analysis import contracts, jaxpr_checks, kernels_check, wire_dtype
+
+    return {
+        "engine_purity": jaxpr_checks.check_engine_purity,
+        "engine_carry": jaxpr_checks.check_engine_carry,
+        "wire_dtype": wire_dtype.check_wire_dtype,
+        "registry_roundtrip": contracts.check_registry_roundtrip,
+        "capability_flags": contracts.check_capability_flags,
+        "coordinatewise": contracts.check_coordinatewise,
+        "pallas_completeness": kernels_check.check_pallas_completeness,
+        "pallas_block_specs": kernels_check.check_pallas_block_specs,
+    }
+
+
+def check_names() -> tuple:
+    return tuple(_registry())
+
+
+def run_checks(only=None) -> list:
+    """Run the selected (default: all) checks, returning CheckResults.
+
+    A check that raises is reported as an errored CheckResult rather than
+    aborting the sweep — the report always covers every requested check."""
+    import time
+
+    registry = _registry()
+    names = list(only) if only else list(registry)
+    unknown = [n for n in names if n not in registry]
+    if unknown:
+        raise KeyError(f"unknown checks: {unknown}; have {list(registry)}")
+    results = []
+    for name in names:
+        t0 = time.time()
+        try:
+            results.append(registry[name]())
+        except Exception as e:  # noqa: BLE001 — surface as errored result
+            res = CheckResult(name)
+            res.error = f"{type(e).__name__}: {e}"
+            res.seconds = time.time() - t0
+            results.append(res)
+    return results

@@ -1,0 +1,65 @@
+"""CLI for btard-lint: ``python -m tools.analysis``.
+
+Exit status 0 iff every selected check passes. ``--json PATH`` writes the
+per-check machine-readable report CI uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    # force CPU before jax loads: the checks are pure abstract eval and
+    # must not grab a TPU out from under a training job
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from tools.analysis import check_names, run_checks
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="btard-lint: static protocol-invariant checks",
+    )
+    ap.add_argument("--only", action="append", metavar="CHECK",
+                    help="run just this check (repeatable)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the per-check JSON report here")
+    ap.add_argument("--list", action="store_true",
+                    help="list check names and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in check_names():
+            print(name)
+        return 0
+
+    results = run_checks(only=args.only)
+    for res in results:
+        status = "ERROR" if res.error else ("FAIL" if res.findings else "ok")
+        print(f"[{status:>5}] {res.name:<20} "
+              f"traced={res.traced:<3} {res.seconds:5.1f}s")
+        if res.error:
+            print(f"        {res.error}")
+        for f in res.findings:
+            print(f"        {f.where}: {f.message}")
+
+    ok = all(r.ok for r in results)
+    n_findings = sum(len(r.findings) for r in results)
+    print(f"btard-lint: {len(results)} checks, {n_findings} findings"
+          f" -> {'PASS' if ok else 'FAIL'}")
+
+    if args.json:
+        report = {
+            "ok": ok,
+            "checks": [r.to_dict() for r in results],
+        }
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"report written to {args.json}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

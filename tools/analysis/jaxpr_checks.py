@@ -1,0 +1,164 @@
+"""btard-lint layer 1: jaxpr purity / determinism / carry stability.
+
+Every security claim in the BTARD reproduction rests on honest recomputes
+matching *bitwise*: a validator re-derives a peer's digests from the public
+seed and accuses on any nonzero difference. That only holds if the engine's
+phase functions are pure functions of their traced inputs — no host
+callbacks, no io/ordered effects, no PRNG source outside the MPRNG fold-in
+chain — and if the scan carry (``ProtocolState``) is shape/dtype/treedef
+stable, so scanned and stepwise execution are the same program.
+
+This layer traces :func:`repro.core.engine.protocol_step`, every individual
+phase function (via :func:`repro.core.engine.traceable_phases`), and a
+``lax.scan`` of the step, over a config matrix that lights up every phase:
+attacks on/off, adaptive clip, warm start, sampled digests, hierarchical
+groups, elastic membership, verified/compressed wrappers, non-verifiable
+baselines.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from tools.analysis.common import (
+    CheckResult,
+    Finding,
+    callback_findings,
+    constant_key_findings,
+)
+
+# one entry per engine feature axis — each config's protocol_step trace
+# must be pure, key-disciplined, and carry-stable
+ENGINE_CONFIGS = (
+    ("base", dict(n=8, d=64)),
+    ("attack_full", dict(n=8, d=64, attack="sign_flip", m_validators=2,
+                         aggregator_attack=True, aggregator_scale=3.0,
+                         misreport_s=True, false_accuse=True,
+                         mprng_abort=True, delta_max=5.0)),
+    ("adaptive_warm", dict(n=8, d=64, adaptive_tol=1e-4, warm_start=True)),
+    ("sampled", dict(n=8, d=64, audit_k=2, m_validators=2)),
+    ("hier", dict(n=8, d=64, groups=2, attack="sign_flip")),
+    ("elastic", dict(n=8, d=64, n_events=4, attack="sign_flip")),
+    ("verified_wrap", dict(n=8, d=64, aggregator="verified:trimmed_mean")),
+    ("compressed", dict(
+        n=8, d=64, attack="sign_flip",
+        aggregator="compressed:butterfly_clip:codec=int8")),
+    ("compressed_hier", dict(
+        n=8, d=64, groups=2, aggregator="compressed:verified:mean")),
+    ("nonverifiable", dict(n=8, d=64, aggregator="krum:n_byzantine=1",
+                           attack="sign_flip")),
+)
+
+
+def purity_findings_for(fn, args, where: str):
+    """Trace ``fn(*args)`` and return purity findings (callbacks, effects,
+    off-chain PRNG). The reusable core — the negative-test suite points it
+    at deliberately impure functions."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return callback_findings(closed, where) + constant_key_findings(
+        closed, where)
+
+
+def carry_findings_for(fn, state_abs, args, where: str):
+    """Shape/dtype/treedef stability of a state->state function: the first
+    output of ``fn(state, *args)`` must be a pytree identical in structure
+    and leaf avals to the input state. This is what makes the step
+    ``lax.scan``-able without implicit promotion or silent reshapes."""
+    findings = []
+    out = jax.eval_shape(fn, state_abs, *args)
+    new_state = out[0] if isinstance(out, tuple) else out
+    in_leaves, in_tree = jax.tree.flatten(state_abs)
+    out_leaves, out_tree = jax.tree.flatten(new_state)
+    if in_tree != out_tree:
+        findings.append(Finding(
+            "carry_stability", where,
+            f"state treedef drifts across the step: {in_tree} -> {out_tree}",
+        ))
+        return findings
+    names = list(type(state_abs)._fields) if hasattr(
+        type(state_abs), "_fields") else [str(i) for i in
+                                          range(len(in_leaves))]
+    for name, a, b in zip(names, in_leaves, out_leaves):
+        if tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype:
+            findings.append(Finding(
+                "carry_stability", where,
+                f"state field '{name}' drifts: {a.shape}/{a.dtype} -> "
+                f"{b.shape}/{b.dtype} (scan carry must be fixed-point)",
+            ))
+    return findings
+
+
+def scan_findings_for(cfg, engine, where: str):
+    """Prove the step actually scans: trace ``lax.scan`` over T abstract
+    steps. An unstable carry raises at trace time — reported as a finding,
+    not a crash."""
+    state = engine.abstract_state(cfg)
+    n, d = cfg.n, cfg.d
+    Gs = jax.ShapeDtypeStruct((3, n, d), jnp.float32)
+    byz = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def scanned(state, Gs, byz_mask):
+        def body(s, G):
+            s2, out = engine.protocol_step(cfg, s, byz_mask, G, G)
+            return s2, (out.g_hat, out.banned_now)
+        return jax.lax.scan(body, state, Gs)
+
+    try:
+        jax.make_jaxpr(scanned)(state, Gs, byz)
+    except (TypeError, ValueError) as e:
+        return [Finding(
+            "carry_stability", where,
+            f"protocol_step does not scan: {e}",
+        )]
+    return []
+
+
+def check_engine_purity() -> CheckResult:
+    """Purity + PRNG discipline for protocol_step and every phase fn."""
+    from repro.core import engine
+
+    t0 = time.time()
+    res = CheckResult("engine_purity")
+    for tag, kw in ENGINE_CONFIGS:
+        cfg = engine.EngineConfig(**kw)
+        state = engine.abstract_state(cfg)
+        n, d = cfg.n, cfg.d
+        byz = jax.ShapeDtypeStruct((n,), jnp.float32)
+        G = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        res.findings += purity_findings_for(
+            partial(engine.protocol_step, cfg), (state, byz, G, G),
+            f"protocol_step[{tag}]",
+        )
+        res.traced += 1
+        for name, (fn, args) in engine.traceable_phases(cfg).items():
+            res.findings += purity_findings_for(
+                fn, args, f"{name}[{tag}]")
+            res.traced += 1
+    res.seconds = time.time() - t0
+    return res
+
+
+def check_engine_carry() -> CheckResult:
+    """ProtocolState in == out (shape/dtype/treedef) + the scan proof."""
+    from repro.core import engine
+
+    t0 = time.time()
+    res = CheckResult("engine_carry")
+    for tag, kw in ENGINE_CONFIGS:
+        cfg = engine.EngineConfig(**kw)
+        state = engine.abstract_state(cfg)
+        n, d = cfg.n, cfg.d
+        byz = jax.ShapeDtypeStruct((n,), jnp.float32)
+        G = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        res.findings += carry_findings_for(
+            partial(engine.protocol_step, cfg), state, (byz, G, G),
+            f"protocol_step[{tag}]",
+        )
+        res.findings += scan_findings_for(cfg, engine,
+                                          f"scan_protocol[{tag}]")
+        res.traced += 2
+    res.seconds = time.time() - t0
+    return res
