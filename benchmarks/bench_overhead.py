@@ -436,6 +436,107 @@ def hbm_pass_model(n_iters, n, d, bytes_per=4, adaptive_iters=2):
     }
 
 
+# (d_model, vocab_size) ladder for the real-model scaling curve: reduced
+# ALBERT scaled along width AND vocab so params grow ~geometrically. Quick
+# mode runs the first three (CI-affordable on CPU); full mode appends the
+# d512/30k-vocab point (~39M params, the committed-baseline ceiling).
+MODEL_SCALING_SIZES = ((128, 2048), (192, 4096), (256, 8192))
+MODEL_SCALING_SIZES_FULL = MODEL_SCALING_SIZES + ((512, 30000),)
+MODEL_SCALING_AGG = "compressed:verified:mean:codec=bf16"
+
+
+def model_scaling_bench(fast=True, steps=4, n_peers=4, seq_len=16, batch=2):
+    """Real-model gauntlet scaling curve: model size (flat gradient dim d)
+    vs measured scanned-BTARD steps/s, per-peer wire bytes, and table
+    overhead fraction, under the bf16 wire codec with full verification and
+    one sign-flip Byzantine peer. The byte columns are analytic
+    (:func:`comm_model` — same accounting as comm_per_spec); the ban
+    columns are protocol guarantees (the attacker must be banned, no honest
+    peer ever accused); steps/s is the one wall-clock column.
+
+    The paper's flat-cost claim, restated on real models: table bytes are
+    size-INDEPENDENT, so table overhead fraction must fall as the model
+    grows while the wire bytes track d exactly.
+    """
+    import dataclasses
+
+    from repro.configs import get_config, reduce_config
+    from repro.core import AttackConfig, BTARDTrainer, TrainerConfig
+    from repro.core.compression import CODEC_BYTES
+    from repro.data import TokenPipeline
+    from repro.models.model import Model
+    from repro.optim import sgd
+
+    cfg0 = reduce_config(get_config("albert-large"))
+    sizes = MODEL_SCALING_SIZES if fast else MODEL_SCALING_SIZES_FULL
+    byz = (n_peers - 1,)
+    rows = []
+    for dm, vocab in sizes:
+        cfg = dataclasses.replace(
+            cfg0, name=f"albert-d{dm}-v{vocab}", d_model=dm, d_ff=4 * dm,
+            n_heads=max(2, dm // 64), n_kv_heads=max(2, dm // 64),
+            head_dim=64, vocab_size=vocab,
+        )
+        m = Model(cfg)
+        pipe = TokenPipeline(vocab, seq_len, batch)
+        tr = BTARDTrainer(
+            lambda p, b, m=m: m.loss_fn(p, b)[0],
+            m.init_params(jax.random.key(0)),
+            lambda peer, step, flipped, pipe=pipe: pipe.device_batch(step, peer),
+            TrainerConfig(
+                n_peers=n_peers, byzantine=byz,
+                attack=AttackConfig(kind="sign_flip", start_step=0),
+                defense="btard", aggregator=MODEL_SCALING_AGG,
+                tau=2.0, clip_iters=5, m_validators=1,
+            ),
+            optimizer=sgd(0.05),
+        )
+        d = tr.d
+        tr.run_scan(steps)  # warmup: trace + compile (bans land here)
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            tr.run_scan(steps)
+            best = min(best, time.perf_counter() - t0)
+        pb = CODEC_BYTES["bf16"]
+        _, table, wire = comm_model(
+            n_peers, d, 4, payload_bytes=pb, sidecar_bytes=2 * n_peers * 4
+        )
+        per_peer = wire + d * 4 + table  # + aggregate all_gather (transport)
+        row = {
+            "name": cfg.name,
+            "params": d,
+            "d_model": dm,
+            "vocab": vocab,
+            "steps_per_s": steps / best,
+            "payload_bytes_per_coord": pb,
+            "wire_bytes_per_peer": wire,
+            "per_peer_bytes": per_peer,
+            "table_bytes": table,
+            "table_overhead_frac": table / per_peer,
+            "byzantine": sorted(byz),
+            "banned": sorted(tr.banned),
+            "honest_banned": sorted(set(tr.banned) - set(byz)),
+        }
+        rows.append(row)
+        emit(
+            f"overhead/model_scaling/{cfg.name}",
+            1e6 * best / steps,
+            f"params={d};sps={row['steps_per_s']:.2f};"
+            f"wire={wire};table_frac={row['table_overhead_frac']:.2e};"
+            f"banned={row['banned']}",
+        )
+    return {
+        "arch": "albert-large (reduced, scaled)",
+        "aggregator": MODEL_SCALING_AGG,
+        "n_peers": n_peers,
+        "seq_len": seq_len,
+        "batch": batch,
+        "steps": steps,
+        "rows": rows,
+    }
+
+
 def scan_engine_bench(steps=None, fast=True, out_dir=None):
     """Legacy host loop vs jitted lax.scan ProtocolState engine: steps/s on
     the controlled classification workload (16 peers, 7 Byzantine,
@@ -585,6 +686,8 @@ def scan_engine_bench(steps=None, fast=True, out_dir=None):
         "scan_engine_warm15": warm,
         "scan_engine_adaptive": adaptive,
         "aggregator_comparison": aggregator_comparison,
+        # real-model gauntlet: scanned BTARD over scaled zoo LMs
+        "model_scaling": model_scaling_bench(fast=fast),
         "fixed_curve": fixed_curve,
         "adaptive_curve": adaptive_curve,
         "scan_speedup_x": scan["steps_per_s"] / max(loop["steps_per_s"], 1e-9),

@@ -320,6 +320,83 @@ def check_scan(fresh, base, tol, errors):
                 )
 
 
+def check_model_scaling(fresh, base, errors):
+    """Real-model scaling-curve gates (BENCH_scan.json model_scaling).
+
+    Analytic + protocol gates only — the byte columns are exact functions
+    of (n, d, codec), the ban columns are guarantees; steps/s is recorded
+    for the curve but not wall-clock-gated (real-model cells are the
+    noisiest thing CI times)."""
+    block = fresh.get("model_scaling")
+    if block is None:
+        errors.append("fresh BENCH_scan.json missing model_scaling block "
+                      "(real-model gauntlet bench did not run?)")
+        return
+    rows = block.get("rows", [])
+    if len(rows) < 3:
+        errors.append(
+            f"model_scaling has {len(rows)} sizes; the scaling curve needs "
+            ">= 3 (params vs steps/s, wire bytes, table overhead)"
+        )
+    n = block.get("n_peers", 0)
+    prev_params, prev_frac = 0, float("inf")
+    for row in rows:
+        tag = f"model_scaling[{row.get('name')}]"
+        params = row.get("params", 0)
+        if params <= prev_params:
+            errors.append(f"{tag}: params {params} not increasing along the "
+                          "curve (size ladder broken)")
+        prev_params = params
+        # exact analytic byte model: bf16 payload + f32 scale sidecars,
+        # size-independent tables (2n^2 + 3n scalars)
+        pb = row.get("payload_bytes_per_coord", 0)
+        want_wire = params * pb + 2 * n * 4
+        if row.get("wire_bytes_per_peer") != want_wire:
+            errors.append(
+                f"{tag}: wire_bytes_per_peer {row.get('wire_bytes_per_peer')}"
+                f" != analytic {want_wire} (codec/sidecar model drift)"
+            )
+        want_table = (2 * n * n + 3 * n) * 4
+        if row.get("table_bytes") != want_table:
+            errors.append(
+                f"{tag}: table_bytes {row.get('table_bytes')} != analytic "
+                f"{want_table} (tables must be size-independent)"
+            )
+        frac = row.get("table_overhead_frac", 1.0)
+        if frac >= prev_frac:
+            errors.append(
+                f"{tag}: table overhead fraction {frac:.2e} not decreasing "
+                "with model size (the flat-cost claim on real models)"
+            )
+        prev_frac = frac
+        if not row.get("steps_per_s", 0) > 0:
+            errors.append(f"{tag}: scanned real-model step not jit-clean")
+        if row.get("honest_banned"):
+            errors.append(f"{tag}: banned honest peers "
+                          f"{row['honest_banned']} (protocol regression)")
+        if row.get("banned") != row.get("byzantine"):
+            errors.append(
+                f"{tag}: banned {row.get('banned')} != byzantine "
+                f"{row.get('byzantine')} (detection arm regressed on real "
+                "gradients)"
+            )
+    if rows and rows[-1].get("table_overhead_frac", 1.0) > 1e-3:
+        errors.append(
+            "model_scaling: table overhead still "
+            f"{rows[-1].get('table_overhead_frac'):.2e} of per-peer bytes at "
+            "the largest size (> 0.1% ceiling)"
+        )
+    base_rows = {r.get("name"): r for r in
+                 (base.get("model_scaling") or {}).get("rows", [])}
+    for row in rows:
+        brow = base_rows.get(row.get("name"))
+        if brow is not None and row.get("banned") != brow.get("banned"):
+            errors.append(
+                f"model_scaling[{row.get('name')}]: ban outcome changed "
+                f"{brow.get('banned')} -> {row.get('banned')}"
+            )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True,
@@ -349,6 +426,7 @@ def main():
             check_flat_cost(fresh, errors)
         else:
             check_scan(fresh, base, args.tol, errors)
+            check_model_scaling(fresh, base, errors)
 
     if errors:
         print("BENCH REGRESSION:")

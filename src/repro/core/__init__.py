@@ -23,5 +23,6 @@ from repro.core.engine import (  # noqa: F401
     protocol_step,
     scan_protocol,
 )
+from repro.core.flatten import FlatBoundary, flat_boundary_for  # noqa: F401
 from repro.core.protocol import AttackConfig, BTARDProtocol  # noqa: F401
 from repro.core.btard_sgd import BTARDTrainer, TrainerConfig  # noqa: F401

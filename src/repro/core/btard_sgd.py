@@ -13,8 +13,8 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.flatten_util import ravel_pytree
 
+from repro.core.flatten import FlatBoundary
 from repro.core.aggregators import (
     AGGREGATORS,
     REGISTRY,
@@ -62,16 +62,21 @@ class BTARDTrainer:
     def __init__(self, loss_fn, params0, batch_fn, cfg: TrainerConfig, optimizer=None):
         self.cfg = cfg
         self.batch_fn = batch_fn
-        flat0, self._unravel = ravel_pytree(params0)
-        self.params = np.asarray(flat0, np.float32)
+        # THE ravel boundary (core.flatten): flat f32 master params / flat
+        # f32 gradient rows on the engine side, original leaf dtypes (bf16
+        # for mixed-precision models) on the model side.
+        self.boundary = FlatBoundary(params0)
+        self._unravel = self.boundary.unflatten
+        self.params = np.asarray(self.boundary.flatten(params0), np.float32)
         self.d = self.params.size
         self.opt = optimizer or sgd(0.05, momentum=0.9, nesterov=True)
         self._opt_state = self.opt.init(jnp.asarray(self.params))
         self._loss = loss_fn
+        boundary = self.boundary
         self._grad = jax.jit(
-            lambda flat, batch: ravel_pytree(
-                jax.grad(lambda p: loss_fn(p, batch))(self._unravel(flat))
-            )[0]
+            lambda flat, batch: boundary.flatten(
+                jax.grad(lambda p: loss_fn(p, batch))(boundary.unflatten(flat))
+            )
         )
         agg = cfg.aggregator
         if agg is None and cfg.defense != "btard" and cfg.defense in REGISTRY:
@@ -194,12 +199,12 @@ class BTARDTrainer:
         per-peer public-seed batches are generated INSIDE the scanned step.
         Requires batch_fn to be jax-traceable in (peer, step) — true of the
         public-seed pipelines; arbitrary host batch_fns must use run()."""
-        unravel, loss_fn, batch_fn = self._unravel, self._loss, self.batch_fn
+        boundary, loss_fn, batch_fn = self.boundary, self._loss, self.batch_fn
 
         def grad_fn(flat, batch):
-            return ravel_pytree(
-                jax.grad(lambda p: loss_fn(p, batch))(unravel(flat))
-            )[0]
+            return boundary.flatten(
+                jax.grad(lambda p: loss_fn(p, batch))(boundary.unflatten(flat))
+            )
 
         return eng.device_data_grads_fn(
             self.cfg.n_peers,
@@ -264,6 +269,12 @@ class BTARDTrainer:
         reasons = np.asarray(outs.ban_reason_now)
         g_norms = np.linalg.norm(np.asarray(outs.g_hat), axis=1)
         iters_used = np.asarray(outs.clip_iters_used)
+        # accusation targets per step (peer accusations + checksum/Delta_max
+        # system accusations) — the "zero honest accusations" property is
+        # asserted on these, not just on the ban set
+        accused = np.asarray(outs.accuse_mat).any(axis=1) | np.asarray(
+            outs.sys_accuse
+        )
         for k in range(n_steps):
             new = [
                 (int(i), eng.BAN_REASON_NAMES[int(reasons[k, i])])
@@ -275,6 +286,7 @@ class BTARDTrainer:
                 "grad_norm": float(g_norms[k]),
                 "n_banned": len(proto.banned),
                 "banned_now": new,
+                "accused_peers": [int(i) for i in np.nonzero(accused[k])[0]],
                 "clip_iters_used": int(iters_used[k]),
             }
             self.history.append(rec)

@@ -1,0 +1,77 @@
+"""The ravel boundary: mixed-dtype parameter/gradient pytrees <-> flat f32.
+
+Everything inside the BTARD engine — butterfly partitioning, CenteredClip,
+the Alg. 6 digest tables, the compressed wire codecs, sampled/hierarchical
+audits — operates on the ``(n, d)`` float32 contract. Real models live on
+the other side of this file: pytrees of bf16/f32 leaves (params AND their
+gradients). ``FlatBoundary`` is the single place the two meet, with an
+explicit contract instead of ad-hoc ``ravel_pytree`` calls per call site:
+
+* ``flatten``  : pytree -> (d,) f32. Leaves are widened (bf16 -> f32 is
+  exact) and concatenated in ``jax.tree`` leaf order.
+* ``unflatten``: (d,) f32 -> pytree with the ORIGINAL leaf dtypes/shapes.
+* round-trip   : ``unflatten(flatten(t))`` is BITWISE ``t`` for any tree
+  whose leaves are f32 or narrower floats (widen-then-narrow of the same
+  value is the identity). The flat f32 vector is the master copy; the bf16
+  pytree is the derived cast — the standard mixed-precision split, and the
+  reason f32 digests computed from flat vectors are recomputable by any
+  validator regardless of the model's storage dtype.
+
+Non-float leaves are rejected at construction: nothing integer belongs on
+the gradient wire, and silently round-tripping an int32 through f32 loses
+bits above 2**24 (see repro.optim.optimizers.apply_updates for the same
+rule on the optimizer side).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FlatBoundary:
+    """Bidirectional pytree <-> (d,) f32 map fixed at construction time.
+
+    Built from a template tree (concrete arrays or ShapeDtypeStructs — use
+    ``jax.eval_shape`` / ``Model.abstract_params()`` to avoid materializing
+    weights). ``flatten``/``unflatten`` are pure jax functions: traceable,
+    jit/scan/vmap-safe.
+    """
+
+    def __init__(self, template):
+        leaves, self.treedef = jax.tree.flatten(template)
+        self.shapes = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+        for dt, shape in zip(self.dtypes, self.shapes):
+            if not jnp.issubdtype(dt, jnp.floating):
+                raise TypeError(
+                    f"FlatBoundary: non-float leaf {dt} {shape} cannot cross "
+                    "the f32 ravel boundary bitwise"
+                )
+        sizes = [int(np.prod(s, dtype=np.int64)) for s in self.shapes]
+        self.offsets = tuple(int(o) for o in np.cumsum([0] + sizes))
+        self.d = self.offsets[-1]
+
+    def flatten(self, tree):
+        """tree (matching the template's structure/shapes) -> (d,) f32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        if not leaves:
+            return jnp.zeros((0,), jnp.float32)
+        return jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves]
+        )
+
+    def unflatten(self, flat):
+        """(d,) f32 -> pytree with the template's leaf shapes AND dtypes."""
+        leaves = [
+            jax.lax.slice(flat, (self.offsets[i],), (self.offsets[i + 1],))
+            .reshape(self.shapes[i])
+            .astype(self.dtypes[i])
+            for i in range(len(self.shapes))
+        ]
+        return self.treedef.unflatten(leaves)
+
+
+def flat_boundary_for(model) -> FlatBoundary:
+    """Boundary for a ``repro.models.Model`` without materializing params."""
+    return FlatBoundary(model.abstract_params())

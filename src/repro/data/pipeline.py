@@ -72,9 +72,21 @@ class TokenPipeline:
 
     def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
                  a: int = 5, c: int = 7, noise: float = 0.2, global_seed: int = 0):
-        self.V = vocab_size
+        self.V = int(vocab_size)
         self.S = seq_len
         self.B = batch_size
+        # canonicalize the affine map mod V, then refuse parameterizations
+        # whose transition a*x+c would wrap int32 on device: the wrap is
+        # SILENT (jnp `%` keeps tokens in [0, V) either way) but the emitted
+        # process is no longer the documented bigram, so a validator reading
+        # the (a, c, V) spec could not reproduce the stream from it. Default
+        # a=5, c=7 is exact for every zoo vocab (V < ~4.3e8 ≫ 2^18 vocabs).
+        a, c = int(a) % self.V, int(c) % self.V
+        if a * (self.V - 1) + c >= 2**31:
+            raise ValueError(
+                f"affine token map a*x+c overflows int32 for a={a}, c={c}, "
+                f"vocab={self.V}: max transition {a * (self.V - 1) + c} >= 2^31"
+            )
         self.a, self.c, self.noise = a, c, noise
         self.global_seed = global_seed
 

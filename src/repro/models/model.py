@@ -99,9 +99,12 @@ class Model:
 
         # chunked + rematted cross-entropy: never materializes (B, S, V) f32
         # logits, and the backward recomputes each chunk's logits instead of
-        # storing them
-        n_chunks = max(1, S // LOSS_CHUNK)
-        csz = S // n_chunks
+        # storing them. Chunk count is the CEILING of S / LOSS_CHUNK with
+        # balanced widths, so every chunk (ragged tail included) stays within
+        # the LOSS_CHUNK memory bound — floor division let a chunk grow to
+        # 2*LOSS_CHUNK-1 tokens (S=4095 materialized the full logits matrix).
+        n_chunks = -(-S // LOSS_CHUNK)
+        csz = -(-S // n_chunks)
 
         @jax.checkpoint
         def chunk_loss(emb_params, x_sl, tgt_sl):
@@ -113,7 +116,7 @@ class Model:
         emb_params = {k: params[k] for k in ("embed", "lm_head") if k in params}
         total = jnp.zeros((), jnp.float32)
         for i in range(n_chunks):
-            sl = slice(i * csz, (i + 1) * csz if i < n_chunks - 1 else S)
+            sl = slice(i * csz, min((i + 1) * csz, S))
             total = total + chunk_loss(emb_params, x[:, sl], targets[:, sl])
         loss = total / (B * S)
         metrics = {"loss": loss, "aux_loss": aux}

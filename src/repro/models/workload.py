@@ -1,0 +1,86 @@
+"""Real-model BTARD workloads: zoo LM training steps behind the trainer API.
+
+``lm_setup(arch)`` packages a model from the config registry as the
+``(loss_fn, params0, batch_fn)`` triple ``BTARDTrainer`` consumes — the same
+shape as the toy ``classification_setup``, so every engine path (host loop,
+jitted scan, every registered aggregator, every attack) runs unchanged on
+real transformer/MoE/SSM/RG-LRU gradients. Per-peer batches come from the
+public-seed ``TokenPipeline`` (``device_batch`` is jit/scan-traceable in
+(step, peer), so the scanned engine generates data on device), and the
+gradient pytree crosses into the engine's ``(n, d)`` f32 world at the
+``core.flatten`` ravel boundary inside the trainer.
+
+Mixed precision: ``dtype="bfloat16"`` stores params/activations in bf16
+(``reduce_config`` defaults to f32 for smoke sizes; pass ``dtype`` to
+override). The trainer's flat master params stay f32 either way — the bf16
+pytree is the derived cast at the boundary — and the PR 6 wire codecs
+(``compressed:*:codec=bf16``) quantize the f32 rows for transport with f32
+digests over dequantized wire values, so zero-honest-accusations remains
+structural, not a tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.data import TokenPipeline
+from repro.models import get_model
+
+
+def _normalize_arch(arch: str) -> str:
+    """Accept CLI spellings like ``albert_large`` for registry key
+    ``albert-large`` (ids use hyphens; shells prefer underscores)."""
+    from repro.configs import _ARCH_MODULES
+
+    if arch in _ARCH_MODULES:
+        return arch
+    alt = arch.replace("_", "-")
+    if alt in _ARCH_MODULES:
+        return alt
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+
+
+def lm_model(arch: str, *, reduced: bool = True, dtype: str | None = None):
+    """Resolve a zoo model, optionally overriding the storage dtype."""
+    from repro.configs import get_config, reduce_config
+    from repro.models.model import Model
+
+    cfg = get_config(_normalize_arch(arch))
+    if reduced:
+        cfg = reduce_config(cfg)
+    if dtype is not None and cfg.dtype != dtype:
+        cfg = dataclasses.replace(cfg, dtype=dtype)
+    return Model(cfg)
+
+
+def lm_setup(arch: str, *, seq_len: int = 32, batch_size: int = 2,
+             reduced: bool = True, dtype: str | None = None,
+             global_seed: int = 0, init_seed: int = 0):
+    """(loss_fn, params0, batch_fn, model) for a zoo LM under BTARD.
+
+    * loss_fn(params, batch) -> scalar (router aux folded in for MoE).
+    * params0: the model's init pytree (bf16 leaves when dtype says so).
+    * batch_fn(peer, step, flipped): public-seed tokens for xi_peer^step,
+      traceable in (peer, step) — runs inside the scanned engine's device
+      data phase. ``flipped`` (the paper's label-flip attack, static bool)
+      reverses the token stream: a deterministic target corruption any
+      validator reproduces from the public seed, the LM analogue of
+      l -> K-1-l.
+    """
+    import jax
+
+    model = lm_model(arch, reduced=reduced, dtype=dtype)
+    pipe = TokenPipeline(
+        model.cfg.vocab_size, seq_len, batch_size, global_seed=global_seed
+    )
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)[0]
+
+    def batch_fn(peer, step, flipped):
+        batch = pipe.device_batch(step, peer)
+        if flipped:
+            batch = dict(batch, tokens=batch["tokens"][:, ::-1])
+        return batch
+
+    params0 = model.init_params(jax.random.key(init_seed))
+    return loss_fn, params0, batch_fn, model

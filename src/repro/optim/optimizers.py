@@ -60,6 +60,10 @@ def _sched(lr):
     return lr if callable(lr) else constant_schedule(lr)
 
 
+def _is_float(leaf):
+    return jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)
+
+
 def sgd(lr, momentum=0.0, nesterov=False, weight_decay=0.0):
     lr = _sched(lr)
 
@@ -72,6 +76,9 @@ def sgd(lr, momentum=0.0, nesterov=False, weight_decay=0.0):
         lr_t = lr(step)
 
         def upd(g, p, m=None):
+            if not _is_float(p):
+                # integer / bool leaves (counters, ids): no decay, no moment
+                return jnp.zeros(p.shape, jnp.float32), m
             g = g.astype(jnp.float32)
             if weight_decay:
                 g = g + weight_decay * p.astype(jnp.float32)
@@ -107,6 +114,8 @@ def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
         t = step + 1
 
         def upd(g, p, m, v):
+            if not _is_float(p):
+                return jnp.zeros(p.shape, jnp.float32), m, v
             g = g.astype(jnp.float32)
             m_new = b1 * m + (1 - b1) * g
             v_new = b2 * v + (1 - b2) * g * g
@@ -143,6 +152,8 @@ def lamb(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01):
         t = step + 1
 
         def upd(g, p, m, v):
+            if not _is_float(p):
+                return jnp.zeros(p.shape, jnp.float32), m, v
             g = g.astype(jnp.float32)
             pf = p.astype(jnp.float32)
             m_new = b1 * m + (1 - b1) * g
@@ -171,4 +182,10 @@ def lamb(lr, b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01):
 
 
 def apply_updates(params, updates):
-    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+    # non-float leaves pass through untouched: an int32 counter round-tripped
+    # through f32 would lose bits above 2**24 even with a zero update
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype) if _is_float(p) else p,
+        params,
+        updates,
+    )

@@ -87,6 +87,40 @@ def test_device_batch_extras_traceable_and_close():
     )
 
 
+@settings(max_examples=6, deadline=None)
+@given(
+    vocab=st.sampled_from([2**16, 151_936, 262_144]),
+    seq=st.sampled_from([31, 129, 2049]),
+)
+def test_device_batch_bitwise_at_zoo_shapes(vocab, seq):
+    """The in-scan == host bitwise property at REAL vocab sizes (>= 2^16)
+    and zoo sequence lengths: token ids stay int32, in [0, V), and the
+    affine transition a*x+c never wraps int32 (audited in TokenPipeline)."""
+    pipe = TokenPipeline(vocab, seq, 2, global_seed=3)
+    host = pipe.batch(7, 5)
+    dev = jax.jit(lambda s, p: pipe.device_batch(s, p))(jnp.int32(7), jnp.int32(5))
+    tok = np.asarray(host["tokens"])
+    assert tok.dtype == np.int32
+    assert tok.min() >= 0 and tok.max() < vocab
+    np.testing.assert_array_equal(tok, np.asarray(dev["tokens"]))
+
+
+def test_affine_overflow_guard():
+    """Parameterizations whose transition a*x+c would wrap int32 must raise
+    loudly at construction — pre-fix they silently wrapped (tokens stayed in
+    [0, V) so nothing downstream noticed the process was not the documented
+    bigram). Defaults stay exact for every zoo vocab."""
+    import pytest
+
+    with pytest.raises(ValueError, match="overflows int32"):
+        TokenPipeline(2**30, 8, 2, a=2**20 + 5)
+    # defaults at the largest zoo-ish vocab are fine
+    TokenPipeline(262_144, 8, 2)
+    # a, c are canonicalized mod V
+    p = TokenPipeline(257, 8, 2, a=257 + 5, c=257 + 7)
+    assert (p.a, p.c) == (5, 7)
+
+
 def test_peer_key_injective_and_overflow_free():
     """Distinct (step, peer) -> distinct keys, including coordinates whose
     affine combination wraps int32."""

@@ -1,0 +1,161 @@
+"""Regression tests for the flat-gradient bug fixes riding the real-model
+gauntlet (ISSUE 10 satellites):
+
+* chunked cross-entropy: every chunk (ragged tail included) must stay within
+  the LOSS_CHUNK memory bound, and the chunked loss must equal the unchunked
+  reference for seq_len % LOSS_CHUNK != 0. Pre-fix, floor-division chunking
+  let a chunk grow to 2*LOSS_CHUNK-1 tokens — S=4095 with LOSS_CHUNK=2048
+  materialized the FULL (B, S, V) f32 logits the chunking exists to avoid.
+* optimizer mixed-precision state: moments are f32 even for bf16 params,
+  weight decay and updates skip non-float leaves (pre-fix, an int32 counter
+  leaf was decayed toward zero), and the f32 update math for bf16 params is
+  bitwise identical to an all-f32 reference run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.model as mm
+from repro.configs import get_config, reduce_config
+from repro.models.model import Model
+from repro.optim import adam, lamb, sgd
+from repro.optim.optimizers import apply_updates
+
+ARCH = "qwen3-1.7b"
+
+
+@pytest.fixture
+def small_chunk(monkeypatch):
+    """Shrink LOSS_CHUNK so ragged-tail behavior is exercised at S=31."""
+    monkeypatch.setattr(mm, "LOSS_CHUNK", 16)
+
+
+def _model_and_params():
+    cfg = reduce_config(get_config(ARCH))
+    m = Model(cfg)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _reference_loss(m, params, toks):
+    """Unchunked cross-entropy over the full (B, S, V) logits."""
+    import repro.models.transformer as tfm
+    from repro.models.layers import apply_norm, embed_tokens, logits_out
+
+    cfg = m.cfg
+    inputs, targets = toks[:, :-1], toks[:, 1:]
+    B, S = inputs.shape
+    pos = jnp.arange(S)
+    x = embed_tokens(params, cfg, inputs, pos=pos if cfg.learned_pos else None)
+    x, _, _ = tfm.stack_apply(
+        params, cfg, x, pos=pos, memory=None, cache=None, mode="train"
+    )
+    x = apply_norm(params["final_norm"], cfg, x)
+    emb = {k: params[k] for k in ("embed", "lm_head") if k in params}
+    logits = logits_out(emb, cfg, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - tgt).sum() / (B * S)
+
+
+@pytest.mark.parametrize("seq", [31, 33, 47])
+def test_chunk_width_never_exceeds_bound(small_chunk, monkeypatch, seq):
+    """No logits chunk may be wider than LOSS_CHUNK — the memory contract
+    the chunking documents. Fails pre-fix: floor division gave S=31 a single
+    31-wide chunk (and S=4095 the full logits matrix at the real bound)."""
+    m, params = _model_and_params()
+    widths = []
+    orig = mm.logits_out
+
+    def spy(emb_params, cfg, x_sl):
+        widths.append(x_sl.shape[1])
+        return orig(emb_params, cfg, x_sl)
+
+    monkeypatch.setattr(mm, "logits_out", spy)
+    toks = jax.random.randint(jax.random.key(seq), (2, seq + 1), 0, m.cfg.vocab_size)
+    loss, _ = m.loss_fn(params, {"tokens": toks})
+    assert bool(jnp.isfinite(loss))
+    assert widths and max(widths) <= mm.LOSS_CHUNK, (seq, widths)
+
+
+@pytest.mark.parametrize("seq", [15, 17, 31, 48])
+def test_ragged_seq_chunked_loss_matches_unchunked(small_chunk, seq):
+    """Chunked loss == unchunked reference for seq_len % LOSS_CHUNK != 0
+    (no token dropped, normalization exact)."""
+    m, params = _model_and_params()
+    toks = jax.random.randint(jax.random.key(seq), (2, seq + 1), 0, m.cfg.vocab_size)
+    loss, _ = m.loss_fn(params, {"tokens": toks})
+    ref = _reference_loss(m, params, toks)
+    np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- optimizers
+
+OPTS = [
+    ("sgd", lambda: sgd(0.1, momentum=0.9, weight_decay=0.01)),
+    ("adam", lambda: adam(0.1, weight_decay=0.01)),
+    ("lamb", lambda: lamb(0.1, weight_decay=0.01)),
+]
+
+
+@pytest.mark.parametrize("name,mk", OPTS)
+def test_moments_are_f32_for_bf16_params(name, mk):
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16), "b": jnp.zeros((4,), jnp.float32)}
+    state = mk().init(params)
+    for leaf in jax.tree.leaves(state):
+        assert leaf.dtype == jnp.float32, (name, leaf.dtype)
+
+
+@pytest.mark.parametrize("name,mk", OPTS)
+def test_weight_decay_skips_integer_leaves(name, mk):
+    """An int32 counter leaf must survive optimizer steps bitwise. Fails
+    pre-fix: weight decay decayed it (100 -> 97 for sgd/adam in 3 steps) and
+    apply_updates round-tripped it through f32 (lossy above 2**24)."""
+    params = {
+        "w": jnp.ones((3,), jnp.bfloat16),
+        "count": jnp.array(100, jnp.int32),
+        "big": jnp.array(2**24 + 1, jnp.int32),  # not representable in f32
+    }
+    grads = jax.tree.map(jnp.zeros_like, params)
+    grads["w"] = jnp.full((3,), 0.5, jnp.bfloat16)
+    opt = mk()
+    st = opt.init(params)
+    p = params
+    for step in range(3):
+        ups, st = opt.update(grads, st, p, step)
+        p = apply_updates(p, ups)
+    assert int(p["count"]) == 100, (name, int(p["count"]))
+    assert int(p["big"]) == 2**24 + 1, (name, int(p["big"]))
+    assert p["count"].dtype == jnp.int32
+    # float leaves still train
+    assert float(p["w"][0]) != 1.0
+
+
+@pytest.mark.parametrize("name,mk", OPTS)
+def test_bf16_update_bitwise_matches_f32_reference(name, mk):
+    """The f32 update computed for bf16 params must be bitwise identical to
+    an all-f32 run fed the same values: mixed precision changes storage, not
+    optimizer math."""
+    w0 = (
+        jax.random.normal(jax.random.key(0), (16,), jnp.float32)
+        .astype(jnp.bfloat16)
+        .astype(jnp.float32)
+    )
+    g0 = (
+        jax.random.normal(jax.random.key(1), (16,), jnp.float32)
+        .astype(jnp.bfloat16)
+        .astype(jnp.float32)
+    )
+    opt_b, opt_f = mk(), mk()
+    pb = {"w": w0.astype(jnp.bfloat16)}
+    pf = {"w": pb["w"].astype(jnp.float32)}  # same VALUES, f32 storage
+    sb, sf = opt_b.init(pb), opt_f.init(pf)
+    for step in range(4):
+        ub, sb = opt_b.update({"w": g0}, sb, pb, step)
+        uf, sf = opt_f.update({"w": g0}, sf, pf, step)
+        assert ub["w"].dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(ub["w"]), np.asarray(uf["w"]))
+        for mb, mf in zip(jax.tree.leaves(sb), jax.tree.leaves(sf)):
+            np.testing.assert_array_equal(np.asarray(mb), np.asarray(mf))
+        pb = apply_updates(pb, ub)
+        pf = {"w": pb["w"].astype(jnp.float32)}

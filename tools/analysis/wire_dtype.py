@@ -75,6 +75,28 @@ SPEC_MATRIX = (
     ("nonverifiable_krum", "krum:n_byzantine=1", {}, jnp.bfloat16),
 )
 
+# The real-model gauntlet cell: the same stage traced at the flat gradient
+# dim of the reduced zoo transformer (core.flatten boundary over
+# abstract_params — no weights materialize), under the mixed-precision
+# contract the gauntlet ships: bf16 payload on the wire, f32 digests over
+# dequantized wire values. Synthetic-D green + real-D red would mean the
+# contract breaks at scale (e.g. a dim-dependent rewrite hoists the upcast).
+REAL_MODEL_SPEC = (
+    "real_model_albert", "compressed:verified:mean:codec=bf16", jnp.bfloat16
+)
+
+
+def _real_model_dim() -> int:
+    """Flat gradient dim of the gauntlet's reference arch, padded to the
+    peer count (the same ravel boundary BTARDTrainer flattens at)."""
+    from repro.configs import get_config, reduce_config
+    from repro.core.flatten import FlatBoundary
+    from repro.models.model import Model
+
+    model = Model(reduce_config(get_config("albert-large")))
+    d = FlatBoundary(model.abstract_params()).d
+    return -(-d // N_PEERS) * N_PEERS
+
 # dtypes that may legitimately cross a collective besides the wire dtype:
 # f32 sidecar scales / digest tables / level-2 combines, index/mask ints
 _ALWAYS_OK = frozenset({
@@ -87,11 +109,14 @@ _VERIF_KEYS = ("checksum", "votes", "clip_iters", "s_table", "norm_table",
 
 
 def trace_aggregation_stage(spec: str, *, groups=None, audit_k=None,
-                            agg_attack=None, v0=False, use_pallas=False):
+                            agg_attack=None, v0=False, use_pallas=False,
+                            d=D):
     """Trace one launch-side robust all-reduce on an abstract 8-peer mesh.
 
     Returns (closed_jaxpr, out_avals) for ``aggregation_stage`` wrapped in
-    the same manual-region harness the real train step uses.
+    the same manual-region harness the real train step uses. ``d`` is the
+    per-peer gradient dim (default the synthetic ``D``; the real-model cell
+    passes the zoo arch's flat dim).
     """
     from repro.launch.steps import aggregation_stage
 
@@ -118,11 +143,11 @@ def trace_aggregation_stage(spec: str, *, groups=None, audit_k=None,
         check_rep=False,
     )
     args = (
-        jax.ShapeDtypeStruct((N_PEERS * D,), jnp.bfloat16),
+        jax.ShapeDtypeStruct((N_PEERS * d,), jnp.bfloat16),
         jax.ShapeDtypeStruct((N_PEERS,), jnp.float32),
         jax.ShapeDtypeStruct((), jnp.int32),
         jax.ShapeDtypeStruct((N_PEERS,), jnp.float32),
-        jax.ShapeDtypeStruct((D,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
     )
     closed = jax.make_jaxpr(f)(*args)
     out = jax.eval_shape(f, *args)
@@ -214,5 +239,14 @@ def check_wire_dtype() -> CheckResult:
         res.findings += callback_findings(closed, where)
         res.findings += constant_key_findings(closed, where)
         res.traced += 1
+    # real-model cell: same rules at the gauntlet arch's flat dim
+    label, spec, wire = REAL_MODEL_SPEC
+    where = f"aggregation_stage[{label}]"
+    closed, out = trace_aggregation_stage(spec, d=_real_model_dim())
+    res.findings += wire_findings(closed, where, wire)
+    res.findings += digest_findings(out, where)
+    res.findings += callback_findings(closed, where)
+    res.findings += constant_key_findings(closed, where)
+    res.traced += 1
     res.seconds = time.time() - t0
     return res
